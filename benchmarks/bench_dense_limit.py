@@ -1,0 +1,53 @@
+"""Paper Fig. 2: the dense-format wall for GNN training.
+
+The paper shows dense-dense GCN training time scaling with node count
+until the dense adjacency exhausts on-chip memory (compile failure beyond
+~60k nodes on CS-3).  Here: measure dense-GCN step time vs N on CPU, and
+compute the analytic failure point for a 16 GB TPU v5e chip (dense adj
+f32) vs the Block-ELL footprint at GNN-typical densities — the Table 1
+argument reproduced for our target hardware.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro.data.pipeline import random_graph
+
+HBM = 16e9  # v5e
+
+
+def run(quick: bool = True):
+    ns = [512, 1024, 2048] if quick else [512, 1024, 2048, 4096, 8192]
+    hidden = 128  # paper Fig. 2 config
+    for n in ns:
+        adj = random_graph(n, avg_degree=8, seed=5, clustered=False)
+        x = np.random.default_rng(0).normal(size=(n, hidden)) \
+            .astype(np.float32)
+        w = np.random.default_rng(1).normal(size=(hidden, hidden)) \
+            .astype(np.float32)
+
+        @jax.jit
+        def dense_layer(a, h, w):
+            return jax.nn.relu(a @ (h @ w))
+
+        t = time_fn(dense_layer, jnp.asarray(adj), jnp.asarray(x),
+                    jnp.asarray(w), warmup=1, iters=3)
+        emit(f"dense_gcn_layer_n{n}", t,
+             f"adj_bytes={4 * n * n}")
+
+    # analytic wall: largest N whose dense adjacency alone fits one chip
+    n_wall = int(np.sqrt(HBM / 4))
+    emit("dense_wall_v5e_nodes", 0.0, f"N_max={n_wall}")
+    # CSR/Block-ELL footprints for the paper's Table-1-style graphs
+    for n, deg in ((169_343, 7), (2_449_029, 25)):  # arxiv, products
+        dense_gb = 4 * n * n / 2**30
+        csr_gb = (8 * n * deg + 8 * n) / 2**30
+        emit(f"footprint_graph_n{n}", 0.0,
+             f"dense_GB={dense_gb:.1f};csr_GB={csr_gb:.3f}")
+
+
+if __name__ == "__main__":
+    run(quick=False)

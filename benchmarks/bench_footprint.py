@@ -1,0 +1,37 @@
+"""Paper Fig. 8: SELLPACK-like streamed elements / CSR nnz vs density.
+
+Reproduces the paper's accounting exactly (END_ROW run-length coding +
+NULL padding to the chunk's longest stream) and adds the TPU Block-ELL
+footprint ratio (our format adaptation) for the same matrices.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.core.formats import (BlockELL, CSR, blockell_stream_elements,
+                                sellpack_stream_elements)
+from repro.data.pipeline import random_sparse_dense
+
+
+def run(quick: bool = True):
+    ns = [4096, 16384] if quick else [16384, 32768, 65536]
+    densities = [1e-3, 1e-2, 1e-1]
+    mycs = [256, 1024]
+    for n in ns:
+        for density in densities:
+            dense = random_sparse_dense(n, density, seed=42)
+            csr = CSR.from_dense(dense)
+            nnz = max(csr.nnz, 1)
+            for myc in mycs:
+                tot = sellpack_stream_elements(csr, myc, 64)
+                emit(f"footprint_sellpack_n{n}_d{density:g}_myc{myc}",
+                     0.0, f"ratio={tot / nnz:.2f}")
+            ell = BlockELL.from_dense(dense, bm=64, bn=64)
+            ratio = blockell_stream_elements(ell) / nnz
+            emit(f"footprint_blockell_n{n}_d{density:g}_bm64",
+                 0.0, f"ratio={ratio:.2f};occupancy={ell.occupancy():.3f}")
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_dense_limit  — Fig. 2 (dense-format wall)
+  bench_footprint    — Fig. 8 (SELLPACK-like vs CSR footprint)
+  bench_spmm         — Fig. 9 (SpMM vs density/N, d=256)
+  bench_sddmm        — Fig. 10 (SDDMM vs density, d=2, mnz sensitivity)
+
+``python -m benchmarks.run [--full]`` (quick mode by default so the CPU
+container finishes in minutes; --full matches the paper's largest sizes).
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    args = ap.parse_args()
+    quick = not args.full
+
+    from benchmarks import (bench_dense_limit, bench_footprint, bench_sddmm,
+                            bench_spmm)
+    benches = {
+        "dense_limit": bench_dense_limit.run,
+        "footprint": bench_footprint.run,
+        "spmm": bench_spmm.run,
+        "sddmm": bench_sddmm.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", file=sys.stderr)
+        fn(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Batched serving with block-sparse (sliding-window) attention.
+
+Spins up the ServingEngine on a small gemma3-family model whose local
+layers use the paper's banded Block-ELL attention, prefillss a batch of
+prompts and decodes continuations; verifies the ring-buffer local KV
+cache (memory ∝ window, not context) against the full forward.
+
+Usage:  PYTHONPATH=src python examples/sparse_attention_serve.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.transformer import forward_hidden, init_lm
+from repro.serve.engine import ServeConfig, ServingEngine
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("gemma3-4b"),
+                              dtype="float32")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+
+    B, S_prompt, n_new = 4, 96, 24
+    prompts = rng.integers(0, cfg.vocab_size, (B, S_prompt)) \
+        .astype(np.int32)
+    eng = ServingEngine(params, cfg, ServeConfig(max_len=S_prompt + n_new))
+
+    t0 = time.time()
+    out = eng.generate(prompts, n_new)
+    dt = time.time() - t0
+    print(f"generated {B}x{n_new} tokens in {dt:.2f}s "
+          f"({B * n_new / dt:.0f} tok/s on CPU)")
+    print("sample:", out[0][:12], "...")
+
+    # verify against teacher-forced full forward (greedy consistency)
+    toks = np.concatenate([prompts, out], axis=1)
+    hid, _, _ = forward_hidden(params, cfg, jnp.asarray(toks),
+                               mode="train", remat=False)
+    head = params["embed"].T
+    logits = np.asarray(hid.astype(jnp.float32) @ head.astype(jnp.float32))
+    greedy = logits[:, S_prompt - 1:-1].argmax(-1)
+    match = (greedy == out).mean()
+    print(f"greedy consistency vs full forward: {match * 100:.1f}% "
+          f"(ring-buffer local KV cache, window={cfg.window})")
+    assert match > 0.99, "decode path diverged from full forward"
+
+    # cache footprint: ring buffer vs full-context cache
+    n_local = sum(1 for i in range(cfg.n_layers)
+                  if cfg.layer_pattern[i % cfg.period] == "local")
+    full = S_prompt + n_new
+    saved = n_local * (full - min(cfg.window, full))
+    print(f"{n_local}/{cfg.n_layers} layers use windowed cache: "
+          f"{saved} cache rows saved vs full-context KV")
+
+
+if __name__ == "__main__":
+    main()

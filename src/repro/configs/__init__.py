@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+from repro.configs.registry import ARCHS, get_config, get_smoke_config
+
+__all__ = ["ModelConfig", "ShapeConfig", "SHAPES", "ARCHS", "get_config",
+           "get_smoke_config"]

@@ -1,0 +1,319 @@
+"""Attention built on the paper's sparse primitives.
+
+Block-sparse attention is the paper's flagship transformer application
+(§1: "sparse attention in transformers"; §4.4: GAT).  An attention layer
+with a block-sparse mask is exactly SDDMM -> masked softmax -> SpMM:
+
+    S = M ⊙ (Q Kᵀ)        (SDDMM with sampling mask M)
+    P = softmax(S)         (only over sampled blocks)
+    O = P V                (SpMM with P in Block-ELL layout)
+
+`local_block_attention` implements the fused banded case (sliding window)
+directly: the kv-block index list per q-block is a *constant-width* band, so
+the gather is uniform — the attention analog of the paper's equal-length
+SELLPACK streams.  `flash_attention` is the dense/causal fallback (chunked
+online softmax, memory O(q_chunk x kv_chunk)).
+
+All functions take q:[B,S,Hq,D], k/v:[B,S,Hkv,D] (GQA: Hq % Hkv == 0) and
+return [B,S,Hq,D].
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q, n_kv: int):
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+# ---------------------------------------------------------------------------
+# Dense reference (oracle for tests)
+# ---------------------------------------------------------------------------
+
+
+def mha_reference(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None, scale: Optional[float] = None):
+    """Plain O(S^2) masked attention — the test oracle."""
+    b, s, hq, d = q.shape
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = _split_gqa(q, n_kv)  # [B,S,Hkv,G,D]
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), dtype=bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Chunked flash attention (pure jnp; dense or causal)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q, k, v, *, causal: bool = True, q_chunk: int = 1024,
+                    kv_chunk: int = 1024, scale: Optional[float] = None,
+                    skip_masked_blocks: bool = False):
+    """Online-softmax attention, O(q_chunk*kv_chunk) live scores.
+
+    ``skip_masked_blocks``: with causal=True, kv chunks strictly above the
+    diagonal are skipped per q-chunk via a bounded scan length — this halves
+    the score FLOPs (the causal analog of not streaming NULL blocks; see
+    EXPERIMENTS.md §Perf).
+    """
+    b, s, hq, d = q.shape
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    if runtime.unrolled():
+        override = runtime.attn_chunk_override()
+        if override:
+            q_chunk = kv_chunk = min(override, s)
+        return _flash_attention_unrolled(
+            q, k, v, causal=causal, q_chunk=q_chunk, kv_chunk=kv_chunk,
+            scale=scale, causal_skip=runtime.causal_skip())
+    assert s % q_chunk == 0 and s % kv_chunk == 0, (s, q_chunk, kv_chunk)
+    nq, nk = s // q_chunk, s // kv_chunk
+
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    q_blocks = qg.reshape(b, nq, q_chunk, n_kv, hq // n_kv, d)
+    k_blocks = kf.reshape(b, nk, kv_chunk, n_kv, d)
+    v_blocks = vf.reshape(b, nk, kv_chunk, n_kv, d)
+
+    qpos_in = jnp.arange(q_chunk)
+    kpos_in = jnp.arange(kv_chunk)
+
+    def q_block_body(qi, q_blk):
+        # q_blk: [B, q_chunk, Hkv, G, D]
+        def kv_step(carry, ki):
+            acc, m, l = carry
+            k_blk = jax.lax.dynamic_index_in_dim(k_blocks, ki, 1, False)
+            v_blk = jax.lax.dynamic_index_in_dim(v_blocks, ki, 1, False)
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            if causal:
+                qpos = qi * q_chunk + qpos_in
+                kpos = ki * kv_chunk + kpos_in
+                mask = kpos[None, :] <= qpos[:, None]
+                logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk)
+            return (acc_new, m_new, l_new), None
+
+        g = hq // n_kv
+        acc0 = jnp.zeros((b, n_kv, g, q_chunk, d), jnp.float32)
+        m0 = jnp.full((b, n_kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        if causal and skip_masked_blocks and nk == nq and q_chunk == kv_chunk:
+            # Only kv blocks [0..qi] can contribute; bound the scan with a
+            # fori_loop of dynamic trip count qi+1.
+            def fori_body(ki, carry):
+                new_carry, _ = kv_step(carry, ki)
+                return new_carry
+            acc, m, l = jax.lax.fori_loop(
+                0, qi + 1, fori_body, (acc0, m0, l0))
+        else:
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, (acc0, m0, l0), jnp.arange(nk))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # [B, Hkv, G, q_chunk, D]
+
+    outs = jax.lax.map(
+        lambda args: q_block_body(*args),
+        (jnp.arange(nq), q_blocks.transpose(1, 0, 2, 3, 4, 5)),
+    )  # [nq, B, Hkv, G, q_chunk, D]
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(b, s, hq, d)
+    return out.astype(q.dtype)
+
+
+def _flash_attention_unrolled(q, k, v, *, causal: bool, q_chunk: int,
+                              kv_chunk: int, scale: float,
+                              causal_skip: bool):
+    """Straight-line (no lax loop) flash attention for cost-model compiles.
+
+    ``causal_skip=True`` statically visits only kv chunks 0..i for q chunk
+    i — exact causal FLOPs, differentiable (all slices static).
+    """
+    b, s, hq, d = q.shape
+    n_kv = k.shape[2]
+    assert s % q_chunk == 0 and s % kv_chunk == 0, (s, q_chunk, kv_chunk)
+    nq, nk = s // q_chunk, s // kv_chunk
+    g = hq // n_kv
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    outs = []
+    for qi in range(nq):
+        q_blk = qg[:, qi * q_chunk:(qi + 1) * q_chunk]
+        acc = jnp.zeros((b, n_kv, g, q_chunk, d), jnp.float32)
+        m = jnp.full((b, n_kv, g, q_chunk), NEG_INF, jnp.float32)
+        l = jnp.zeros((b, n_kv, g, q_chunk), jnp.float32)
+        if causal and causal_skip:
+            kv_range = [ki for ki in range(nk)
+                        if ki * kv_chunk <= qi * q_chunk + q_chunk - 1]
+        else:
+            kv_range = list(range(nk))
+        for ki in kv_range:
+            k_blk = kf[:, ki * kv_chunk:(ki + 1) * kv_chunk]
+            v_blk = vf[:, ki * kv_chunk:(ki + 1) * kv_chunk]
+            logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk) * scale
+            if causal:
+                qpos = qi * q_chunk + np.arange(q_chunk)
+                kpos = ki * kv_chunk + np.arange(kv_chunk)
+                mask = kpos[None, :] <= qpos[:, None]
+                if not mask.all():
+                    logits = jnp.where(
+                        jnp.asarray(mask)[None, None, None], logits, NEG_INF)
+            m_new = jnp.maximum(m, logits.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(logits - m_new[..., None])
+            l = l * alpha + p.sum(axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bkhd->bhgqd", p, v_blk)
+            m = m_new
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(out.transpose(0, 3, 1, 2, 4).reshape(b, q_chunk, hq, d))
+    return jnp.concatenate(outs, axis=1).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Banded block-sparse attention (sliding window) — the paper's technique
+# ---------------------------------------------------------------------------
+
+
+def local_block_attention(q, k, v, *, window: int, block: int = 512,
+                          scale: Optional[float] = None):
+    """Sliding-window causal attention as banded Block-ELL gather.
+
+    Each q block attends to a constant-width band of kv blocks
+    [i - w_blocks + 1, i]: the ELL index list per block-row has uniform
+    width (the paper's equal-length streams), so the whole computation is a
+    single uniform gather + batched matmul — SDDMM/softmax/SpMM fused.
+    Memory/compute: O(S * window), independent of S^2.
+    """
+    b, s, hq, d = q.shape
+    n_kv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    assert s % block == 0, (s, block)
+    assert window % block == 0, (window, block)
+    nq = s // block
+    w_blocks = window // block + 1  # +1: the diagonal (causal partial) block
+
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)
+    g = hq // n_kv
+    q_blocks = qg.reshape(b, nq, block, n_kv, g, d)
+
+    # Banded ELL indices: block-row i gathers kv blocks [i-w+1 .. i], clipped.
+    rows = np.arange(nq)[:, None]
+    ell = rows - np.arange(w_blocks - 1, -1, -1)[None, :]  # ascending kv idx
+    valid = ell >= 0
+    ell_idx = jnp.asarray(np.where(valid, ell, 0))  # [nq, w_blocks]
+    valid = jnp.asarray(valid)
+
+    k_blocks = k.astype(jnp.float32).reshape(b, nq, block, n_kv, d)
+    v_blocks = v.astype(jnp.float32).reshape(b, nq, block, n_kv, d)
+    k_g = k_blocks[:, ell_idx]  # [B, nq, w, block, Hkv, D]
+    v_g = v_blocks[:, ell_idx]
+
+    logits = jnp.einsum("bnqhgd,bnwkhd->bnhgqwk", q_blocks, k_g) * scale
+
+    qpos = jnp.arange(block)[:, None, None]  # within-block q position
+    kpos = jnp.arange(block)[None, None, :]
+    # absolute positions: q = i*block + qpos ; k = ell[i,w]*block + kpos
+    block_off = (ell_idx - rows)[..., None, :, None] * block  # [nq,1,w,1]
+    rel = kpos + block_off - qpos  # k_abs - q_abs
+    mask = (rel <= 0) & (rel > -window) & valid[:, None, :, None]
+    logits = jnp.where(mask[None, :, None, None], logits, NEG_INF)
+
+    flat = logits.reshape(*logits.shape[:-2], w_blocks * block)
+    p = jax.nn.softmax(flat, axis=-1).reshape(logits.shape)
+    out = jnp.einsum("bnhgqwk,bnwkhd->bnqhgd", p, v_g)
+    return out.reshape(b, s, hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention (single new token against a KV cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q, k_cache, v_cache, *, length=None,
+                     window: Optional[int] = None,
+                     scale: Optional[float] = None):
+    """q: [B,1,Hq,D] against k/v cache [B,S,Hkv,D]; O(S) per token.
+
+    ``length``: number of valid cache positions (int or [B] array).
+    ``window``: restrict to the last ``window`` positions (local layers).
+    """
+    b, s, n_kv, d = k_cache.shape
+    hq = q.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)[:, 0]  # [B,Hkv,G,D]
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    kpos = jnp.arange(s)
+    if length is None:
+        length = s
+    length = jnp.asarray(length)
+    if length.ndim == 0:
+        length = jnp.full((b,), length)
+    mask = kpos[None, :] < length[:, None]  # [B,S]
+    if window is not None:
+        mask &= kpos[None, :] >= (length[:, None] - window)
+    logits = jnp.where(mask[:, None, None, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def decode_attention_partial(q, k_shard, v_shard, mask_shard, *, scale=None):
+    """Per-shard flash-decode partial for sequence-parallel 500k decode.
+
+    Returns (numerator [B,Hq,D], denominator [B,Hq], running max [B,Hq]).
+    Partials from seq shards merge with `merge_partials` (psum-style tree
+    fold) — the cross-chip analog of the paper's north->south partial-sum
+    accumulation.
+    """
+    b, s, n_kv, d = k_shard.shape
+    hq = q.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    qg = _split_gqa(q, n_kv).astype(jnp.float32)[:, 0]
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                        k_shard.astype(jnp.float32)) * scale
+    logits = jnp.where(mask_shard[:, None, None, :], logits, NEG_INF)
+    m = logits.max(axis=-1)
+    p = jnp.exp(logits - m[..., None])
+    l = p.sum(axis=-1)
+    num = jnp.einsum("bhgk,bkhd->bhgd", p, v_shard.astype(jnp.float32))
+    return (num.reshape(b, hq, d), l.reshape(b, hq), m.reshape(b, hq))
+
+
+def merge_partials(p1, p2):
+    """Associative merge of two flash-decode partials."""
+    n1, l1, m1 = p1
+    n2, l2, m2 = p2
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    return (n1 * a1[..., None] + n2 * a2[..., None], l1 * a1 + l2 * a2, m)

@@ -1,0 +1,342 @@
+"""Sparse storage formats.
+
+The paper's SELLPACK-like format re-buckets nonzeros of A by the consumer
+PE-row's column range and pads every stream to the same length so that all
+I/O channels carry uniform traffic.  The TPU-native analog implemented here
+is **Block-ELL**: A is tiled into (bm x bn) blocks, each block-row keeps its
+nonzero blocks left-aligned and is padded to a fixed width W with zero
+blocks whose index points at an arbitrary valid block (they contribute
+exactly zero to the product, the MXU analog of NULL wavelets).
+
+``BlockCOO`` is the SDDMM-side format: the paper stores the nonzeros of a
+tile of A in COO on each worker; here each nonzero *block* carries its
+(block-row, block-col) coordinates.
+
+``CSR`` mirrors the paper's host-side baseline format and is what the
+streaming-footprint accounting (Fig. 8 reproduction) starts from.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+# ---------------------------------------------------------------------------
+# CSR (host-side baseline; mirrors scipy.sparse.csr_matrix layout)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CSR:
+    """Compressed sparse row; host-side (numpy) container."""
+
+    indptr: np.ndarray  # int64[M+1]
+    indices: np.ndarray  # int32[nnz]
+    values: np.ndarray  # dtype[nnz]
+    shape: Tuple[int, int]
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @staticmethod
+    def from_dense(dense: np.ndarray) -> "CSR":
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        mask = dense != 0
+        counts = mask.sum(axis=1)
+        indptr = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        idx = np.nonzero(mask)
+        return CSR(
+            indptr=indptr,
+            indices=idx[1].astype(np.int32),
+            values=dense[idx],
+            shape=(m, n),
+        )
+
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n), dtype=self.values.dtype)
+        for r in range(m):
+            lo, hi = self.indptr[r], self.indptr[r + 1]
+            out[r, self.indices[lo:hi]] = self.values[lo:hi]
+        return out
+
+    def nbytes(self) -> int:
+        return self.indptr.nbytes + self.indices.nbytes + self.values.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Block-ELL (SELLPACK-like, TPU-adapted)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockELL:
+    """Block-ELL sparse matrix.
+
+    indices: int32[nbr, W]   block-column ids; padded slots point at slot 0's
+                             block column (any valid id) and carry zero data.
+    blocks:  dtype[nbr, W, bm, bn]  block data; padded slots are all-zero.
+    nblocks: int32[nbr]      true (unpadded) block count per block-row.
+    shape:   (M, N) logical dense shape (multiples of bm / bn after padding).
+    """
+
+    indices: Array
+    blocks: Array
+    nblocks: Array
+    shape: Tuple[int, int]
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        return (self.indices, self.blocks, self.nblocks), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indices, blocks, nblocks = children
+        return cls(indices=indices, blocks=blocks, nblocks=nblocks, shape=aux)
+
+    # -- derived metadata ---------------------------------------------------
+    @property
+    def bm(self) -> int:
+        return self.blocks.shape[2]
+
+    @property
+    def bn(self) -> int:
+        return self.blocks.shape[3]
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.indices.shape[0]
+
+    @property
+    def ell_width(self) -> int:
+        return self.indices.shape[1]
+
+    @property
+    def dtype(self):
+        return self.blocks.dtype
+
+    def nbytes(self) -> int:
+        return sum(np.prod(a.shape) * a.dtype.itemsize
+                   for a in (self.indices, self.blocks, self.nblocks))
+
+    # -- conversions ---------------------------------------------------------
+    @staticmethod
+    def from_dense(
+        dense: np.ndarray,
+        bm: int,
+        bn: int,
+        ell_width: int | None = None,
+    ) -> "BlockELL":
+        """Tile ``dense`` into (bm, bn) blocks and keep nonzero blocks.
+
+        The dense input is zero-padded up to multiples of (bm, bn).  If
+        ``ell_width`` is given, block-rows with more nonzero blocks raise.
+        """
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        mp, np_ = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn
+        if (mp, np_) != (m, n):
+            pad = np.zeros((mp, np_), dtype=dense.dtype)
+            pad[:m, :n] = dense
+            dense = pad
+        nbr, nbc = mp // bm, np_ // bn
+        tiles = dense.reshape(nbr, bm, nbc, bn).transpose(0, 2, 1, 3)
+        nz = tiles.reshape(nbr, nbc, -1).any(axis=-1)  # bool[nbr, nbc]
+        counts = nz.sum(axis=1).astype(np.int32)
+        width = int(counts.max()) if ell_width is None else int(ell_width)
+        width = max(width, 1)
+        if (counts > width).any():
+            raise ValueError(
+                f"ell_width={width} < max nonzero blocks per row "
+                f"({int(counts.max())})")
+        indices = np.zeros((nbr, width), dtype=np.int32)
+        blocks = np.zeros((nbr, width, bm, bn), dtype=dense.dtype)
+        for i in range(nbr):
+            cols = np.nonzero(nz[i])[0]
+            indices[i, : len(cols)] = cols
+            blocks[i, : len(cols)] = tiles[i, cols]
+            # padded slots: index 0 (or first real col), zero data
+            if len(cols) == 0:
+                indices[i, :] = 0
+            else:
+                indices[i, len(cols):] = cols[0]
+        return BlockELL(
+            indices=jnp.asarray(indices),
+            blocks=jnp.asarray(blocks),
+            nblocks=jnp.asarray(counts),
+            shape=(mp, np_),
+        )
+
+    def to_dense(self) -> np.ndarray:
+        """Inverse of from_dense (padded shape)."""
+        indices = np.asarray(self.indices)
+        blocks = np.asarray(self.blocks)
+        nblocks = np.asarray(self.nblocks)
+        nbr, w = indices.shape
+        bm, bn = self.bm, self.bn
+        nbc = self.shape[1] // bn
+        out = np.zeros((nbr, nbc, bm, bn), dtype=blocks.dtype)
+        for i in range(nbr):
+            for s in range(int(nblocks[i])):
+                out[i, indices[i, s]] += blocks[i, s]
+        return out.transpose(0, 2, 1, 3).reshape(self.shape)
+
+    def occupancy(self) -> float:
+        """Fraction of ELL slots that hold real blocks (1.0 = no padding)."""
+        total = self.n_block_rows * self.ell_width
+        return float(np.asarray(self.nblocks).sum()) / max(total, 1)
+
+
+# ---------------------------------------------------------------------------
+# Block-COO (SDDMM-side format)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class BlockCOO:
+    """Coordinate list of nonzero (bm x bn) blocks.
+
+    rows/cols: int32[nnzb] block coordinates (padded entries repeat slot 0 and
+               carry an all-zero mask so they contribute nothing).
+    blocks:    dtype[nnzb, bm, bn] block data (for SDDMM this is the sampling
+               mask / values of A).
+    """
+
+    rows: Array
+    cols: Array
+    blocks: Array
+    shape: Tuple[int, int]
+
+    def tree_flatten(self):
+        return (self.rows, self.cols, self.blocks), self.shape
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, blocks = children
+        return cls(rows=rows, cols=cols, blocks=blocks, shape=aux)
+
+    @property
+    def bm(self) -> int:
+        return self.blocks.shape[1]
+
+    @property
+    def bn(self) -> int:
+        return self.blocks.shape[2]
+
+    @property
+    def nnzb(self) -> int:
+        return self.rows.shape[0]
+
+    def nbytes(self) -> int:
+        return sum(np.prod(a.shape) * a.dtype.itemsize
+                   for a in (self.rows, self.cols, self.blocks))
+
+    @staticmethod
+    def from_dense(
+        dense: np.ndarray, bm: int, bn: int, pad_to: int | None = None
+    ) -> "BlockCOO":
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        mp, np_ = _cdiv(m, bm) * bm, _cdiv(n, bn) * bn
+        if (mp, np_) != (m, n):
+            pad = np.zeros((mp, np_), dtype=dense.dtype)
+            pad[:m, :n] = dense
+            dense = pad
+        nbr, nbc = mp // bm, np_ // bn
+        tiles = dense.reshape(nbr, bm, nbc, bn).transpose(0, 2, 1, 3)
+        nz = tiles.reshape(nbr, nbc, -1).any(axis=-1)
+        ridx, cidx = np.nonzero(nz)
+        nnzb = len(ridx)
+        if nnzb == 0:
+            ridx, cidx = np.zeros(1, np.int64), np.zeros(1, np.int64)
+            blocks = np.zeros((1, bm, bn), dtype=dense.dtype)
+            nnzb = 1
+        else:
+            blocks = tiles[ridx, cidx]
+        if pad_to is not None and pad_to > nnzb:
+            padn = pad_to - nnzb
+            ridx = np.concatenate([ridx, np.full(padn, ridx[0])])
+            cidx = np.concatenate([cidx, np.full(padn, cidx[0])])
+            blocks = np.concatenate(
+                [blocks, np.zeros((padn, bm, bn), dtype=blocks.dtype)])
+        return BlockCOO(
+            rows=jnp.asarray(ridx, jnp.int32),
+            cols=jnp.asarray(cidx, jnp.int32),
+            blocks=jnp.asarray(blocks),
+            shape=(mp, np_),
+        )
+
+    def to_dense(self) -> np.ndarray:
+        rows = np.asarray(self.rows)
+        cols = np.asarray(self.cols)
+        blocks = np.asarray(self.blocks)
+        bm, bn = self.bm, self.bn
+        nbr, nbc = self.shape[0] // bm, self.shape[1] // bn
+        out = np.zeros((nbr, nbc, bm, bn), dtype=blocks.dtype)
+        # Padded duplicates carry zero blocks; += keeps them harmless.
+        np.add.at(out, (rows, cols), blocks)
+        return out.transpose(0, 2, 1, 3).reshape(self.shape)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful SELLPACK-like stream accounting (Fig. 8 reproduction)
+# ---------------------------------------------------------------------------
+
+
+def sellpack_stream_elements(
+    csr: CSR, max_y_chunk: int, max_v_per_pe: int
+) -> int:
+    """Total (index,value)-pair count streamed in the paper's SELLPACK-like
+    format.
+
+    The host slices A into chunks of ``max_y_chunk`` rows.  Within a chunk,
+    the nonzeros of each row are re-bucketed by worker-row column range
+    (``max_v_per_pe`` wide).  Every bucket's stream carries one END_ROW
+    marker per *run* of row terminations (run-length encoded: consecutive
+    empty rows collapse into a single END_ROW pair), and all streams in a
+    chunk are padded with NULLs to the chunk's longest stream.
+    """
+    m, n = csr.shape
+    n_buckets = _cdiv(n, max_v_per_pe)
+    total = 0
+    for c0 in range(0, m, max_y_chunk):
+        c1 = min(c0 + max_y_chunk, m)
+        # per-bucket stream length for this chunk
+        lengths = np.zeros(n_buckets, dtype=np.int64)
+        # nonzero counts: bucket each row's column indices
+        prev_emitted_end = np.zeros(n_buckets, dtype=bool)
+        for r in range(c0, c1):
+            lo, hi = csr.indptr[r], csr.indptr[r + 1]
+            cols = csr.indices[lo:hi]
+            counts = np.bincount(cols // max_v_per_pe, minlength=n_buckets)
+            lengths += counts
+            # END_ROW run-length coding: a bucket that receives nonzeros for
+            # this row must emit an END_ROW afterwards; a bucket receiving
+            # nothing extends the previous END_ROW run (no new element).
+            has_data = counts > 0
+            new_end = has_data | ~prev_emitted_end
+            lengths += new_end.astype(np.int64)
+            prev_emitted_end = np.ones(n_buckets, dtype=bool)
+        total += int(lengths.max()) * n_buckets  # NULL-padded to equal length
+    return total
+
+
+def blockell_stream_elements(ell: BlockELL) -> int:
+    """Elements (index or value words) resident in the Block-ELL layout —
+    the TPU analog of the paper's streamed-element count."""
+    return int(np.prod(ell.blocks.shape)) + int(np.prod(ell.indices.shape))

@@ -1,0 +1,24 @@
+"""Public SDDMM API:  Y = A ⊙ (B @ C)  computed only at A's nonzeros."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import BlockCOO
+from repro.kernels.sddmm.ops import sddmm_blockcoo as _sddmm_kernelpath
+
+
+def sddmm(a: BlockCOO, b, c, **kw) -> BlockCOO:
+    """Block-granular SDDMM (kernel or reference path)."""
+    return _sddmm_kernelpath(a, b, c, **kw)
+
+
+def sddmm_coo(row_ids, col_ids, b, c):
+    """Element-granular SDDMM: out[e] = b[row[e]] . c[:, col[e]].
+
+    The scalar path used by GAT on CPU and as the general-pattern oracle.
+    b: [M, K]; c: [K, N] -> values[e] for each coordinate.
+    """
+    bs = b[row_ids].astype(jnp.float32)  # [nnz, K]
+    cs = c.T[col_ids].astype(jnp.float32)  # [nnz, K]
+    return jnp.sum(bs * cs, axis=-1).astype(b.dtype)

@@ -1,0 +1,54 @@
+"""Public SpMM API:  Y = A @ H  with sparse A.
+
+Three execution paths, mirroring the paper's design space:
+  * Block-ELL Pallas kernel (TPU target; `repro.kernels.spmm`) — the
+    SELLPACK-like streaming design.
+  * Block-ELL jnp reference — same math, XLA-fused; CPU path and oracle.
+  * Element-level CSR segment-sum — the general scalar path (and the analog
+    of the paper's initial CSR-streaming design); exact for any sparsity
+    pattern without blocking/padding overhead, but does not use the MXU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR, BlockELL
+from repro.kernels.spmm.ops import spmm_blockell as _spmm_blockell_kernelpath
+
+
+def spmm(a: BlockELL, h, **kw):
+    """Y = A @ H for Block-ELL A (dispatches kernel vs reference)."""
+    return _spmm_blockell_kernelpath(a, h, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Element-level CSR path (jnp; the "initial design" analog)
+# ---------------------------------------------------------------------------
+
+
+def csr_to_device_arrays(csr: CSR):
+    """Expand CSR to (row_ids, col_ids, values) device arrays."""
+    row_ids = np.repeat(
+        np.arange(csr.shape[0], dtype=np.int32), np.diff(csr.indptr)
+    )
+    return (
+        jnp.asarray(row_ids),
+        jnp.asarray(csr.indices),
+        jnp.asarray(csr.values),
+    )
+
+
+def spmm_csr(row_ids, col_ids, values, h, num_rows: int):
+    """Y = A @ H via gather + segment-sum (element-granular)."""
+    gathered = values[:, None].astype(jnp.float32) * h[col_ids].astype(
+        jnp.float32
+    )
+    out = jax.ops.segment_sum(gathered, row_ids, num_segments=num_rows)
+    return out.astype(h.dtype)
+
+
+def spmm_dense(a_dense, h):
+    """Dense baseline (the paper's Fig. 2 failure mode)."""
+    return a_dense @ h

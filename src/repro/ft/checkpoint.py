@@ -1,0 +1,147 @@
+"""Atomic, async checkpointing for arbitrary pytrees.
+
+Layout:  <dir>/step_<N>/  with one .npy per leaf (path-encoded filename)
+plus metadata.json (treedef, step, mesh shape, config name).  Writes go to
+a temp directory renamed into place, so a crash mid-write never corrupts
+the latest checkpoint; a background thread makes saves non-blocking
+(training continues while the previous step serializes).
+
+Restore is mesh-independent: leaves are saved unsharded (gathered), so a
+checkpoint from a 256-chip run restores onto 512 chips or 1 CPU —
+the elastic-scaling path (ft/resharding.py) re-places them.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import tempfile
+import threading
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+_SEP = "__"
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(_path_str(p) for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def _path_str(p) -> str:
+    if isinstance(p, jax.tree_util.DictKey):
+        return f"d:{p.key}"
+    if isinstance(p, jax.tree_util.SequenceKey):
+        return f"s:{p.idx}"
+    if isinstance(p, jax.tree_util.GetAttrKey):
+        return f"a:{p.name}"
+    return f"x:{p}"
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_save: bool = True):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree, *, meta: Optional[Dict] = None,
+             block: bool = False):
+        # gather to host BEFORE handing off to the writer thread
+        leaves, _ = _flatten_with_paths(tree)
+        host_leaves = {k: np.asarray(v) for k, v in leaves.items()}
+        self.wait()  # one in-flight save at a time
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_leaves, meta or {}),
+                daemon=True)
+            self._thread.start()
+        else:
+            self._write(step, host_leaves, meta or {})
+
+    def _write(self, step: int, host_leaves: Dict[str, np.ndarray],
+               meta: Dict):
+        final = os.path.join(self.directory, f"step_{step:08d}")
+        tmp = tempfile.mkdtemp(dir=self.directory, prefix=".tmp_")
+        try:
+            for key, arr in host_leaves.items():
+                np.save(os.path.join(tmp, key + ".npy"), arr)
+            with open(os.path.join(tmp, "metadata.json"), "w") as f:
+                json.dump({"step": step, **meta}, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._gc()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.directory):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m and os.path.exists(os.path.join(self.directory, name,
+                                                 "metadata.json")):
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, target_tree, step: Optional[int] = None,
+                sharding_tree=None):
+        """Restore into the structure of ``target_tree``.
+
+        ``sharding_tree``: optional pytree of jax.sharding.Sharding — leaves
+        are device_put with it (the elastic re-placement hook).
+        """
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        d = os.path.join(self.directory, f"step_{step:08d}")
+        keys, treedef = _flatten_with_paths(target_tree)
+        shardings = None
+        if sharding_tree is not None:
+            shardings, _ = _flatten_with_paths(sharding_tree)
+        leaves = {}
+        for key, ref in keys.items():
+            arr = np.load(os.path.join(d, key + ".npy"))
+            if arr.shape != tuple(ref.shape):
+                raise ValueError(
+                    f"checkpoint leaf {key}: shape {arr.shape} != "
+                    f"expected {ref.shape}")
+            if shardings is not None:
+                leaves[key] = jax.device_put(arr, shardings[key])
+            else:
+                leaves[key] = jax.numpy.asarray(arr, dtype=ref.dtype)
+        return jax.tree_util.tree_unflatten(
+            treedef, [leaves[k] for k in keys])
+
+    def metadata(self, step: Optional[int] = None) -> Dict:
+        step = step if step is not None else self.latest_step()
+        with open(os.path.join(self.directory, f"step_{step:08d}",
+                               "metadata.json")) as f:
+            return json.load(f)

@@ -1,0 +1,34 @@
+"""Elastic scaling: move a training state between meshes.
+
+Checkpoints store unsharded host arrays (ft/checkpoint.py), so elasticity
+reduces to re-placement: build the sharding tree for the NEW mesh from the
+same logical-axis rules and device_put every leaf.  A job that loses a pod
+restarts on the (2x smaller) mesh from the latest checkpoint with no
+format conversion; scale-up is the same operation in reverse.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def sharding_tree_for(tree, mesh: Mesh, spec_fn) -> object:
+    """Pytree of NamedShardings; spec_fn(path, leaf) -> PartitionSpec."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    shardings = [NamedSharding(mesh, spec_fn(path, leaf))
+                 for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def replicated_tree(tree, mesh: Mesh):
+    return sharding_tree_for(tree, mesh, lambda path, leaf: P())
+
+
+def reshard(tree, new_mesh: Mesh, spec_fn=None):
+    """Re-place a live pytree onto a new mesh (gather + scatter)."""
+    spec_fn = spec_fn or (lambda path, leaf: P())
+    target = sharding_tree_for(tree, new_mesh, spec_fn)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(jax.device_get(x), s), tree, target)

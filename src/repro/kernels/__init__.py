@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+Each kernel package contains:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (tile selection, padding, dtype policy)
+  ref.py    — pure-jnp oracle used by tests and as the CPU execution path
+"""

@@ -1,0 +1,4 @@
+from repro.kernels.bsattn.ops import block_sparse_flash_attention
+from repro.kernels.bsattn.ref import block_sparse_attention_ref
+
+__all__ = ["block_sparse_flash_attention", "block_sparse_attention_ref"]

@@ -1,0 +1,43 @@
+"""Public wrapper: banded (sliding-window) and custom block-sparse masks."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.bsattn.kernel import bsattn_kernel
+
+
+def banded_ell(s: int, block_q: int, block_kv: int, window: int):
+    """ELL kv-block lists for causal sliding-window attention.
+
+    Constant width (the paper's equal-length streams): block-row i lists
+    kv blocks [i - w_blocks + 1 .. i], clipped, with validity flags.
+    """
+    nq = s // block_q
+    w_blocks = window // block_kv + 1 if window > 0 else s // block_kv
+    rows = np.arange(nq)[:, None] * (block_q // block_kv)
+    ell = rows - np.arange(w_blocks - 1, -1, -1)[None, :]
+    valid = ell >= 0
+    return (np.where(valid, ell, 0).astype(np.int32),
+            valid.astype(np.int32))
+
+
+def block_sparse_flash_attention(q, k, v, *, window: int = 0,
+                                 causal: bool = True, block_q: int = 512,
+                                 block_kv: int = 512, ell_idx=None,
+                                 valid=None, interpret: bool = False):
+    """Fused SDDMM->softmax->SpMM attention over a block-sparse mask.
+
+    q: [BH, S, D]; k/v: [BHkv, S, D] (GQA: BH % BHkv == 0; the kernel
+    gathers the right kv head via index arithmetic, never materializing
+    repeated KV).  Default mask: causal sliding window of ``window``
+    (banded Block-ELL, constant width).  Custom patterns: pass
+    ``ell_idx``/``valid`` [n_q_blocks, W].
+    """
+    s = q.shape[1]
+    if ell_idx is None:
+        import jax.numpy as jnp
+        ell_np, val_np = banded_ell(s, block_q, block_kv, window)
+        ell_idx, valid = jnp.asarray(ell_np), jnp.asarray(val_np)
+    return bsattn_kernel(ell_idx, valid, q, k, v, block_q=block_q,
+                         block_kv=block_kv, causal=causal, window=window,
+                         interpret=interpret)

@@ -1,0 +1,4 @@
+from repro.kernels.sddmm.ops import sddmm_blockcoo
+from repro.kernels.sddmm.ref import sddmm_blockcoo_ref
+
+__all__ = ["sddmm_blockcoo", "sddmm_blockcoo_ref"]

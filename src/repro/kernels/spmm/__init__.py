@@ -1,0 +1,4 @@
+from repro.kernels.spmm.ops import spmm_blockell
+from repro.kernels.spmm.ref import spmm_blockell_ref
+
+__all__ = ["spmm_blockell", "spmm_blockell_ref"]

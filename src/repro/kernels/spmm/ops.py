@@ -1,0 +1,49 @@
+"""Public jit'd wrapper for Block-ELL SpMM."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import BlockELL
+from repro.kernels.spmm.kernel import spmm_blockell_kernel
+from repro.kernels.spmm.ref import spmm_blockell_ref
+
+
+def _pick_bd(d: int) -> int:
+    """Largest MXU-friendly tile of the D axis that divides D (<=512)."""
+    for cand in (512, 256, 128):
+        if d % cand == 0:
+            return cand
+    return d  # small D (e.g. GAT scores with d=2): single tile
+
+
+def spmm_blockell(
+    ell: BlockELL,
+    h,
+    *,
+    bd: int | None = None,
+    out_dtype=None,
+    use_kernel: bool = True,
+    interpret: bool = False,
+):
+    """Y = A @ H with A in Block-ELL format.
+
+    ``use_kernel=False`` (or a non-TPU-friendly shape) falls back to the
+    pure-jnp reference, which XLA fuses well on CPU; the Pallas kernel is the
+    TPU execution path and is validated against the reference in interpret
+    mode by tests/test_kernels_spmm.py.
+    """
+    out_dtype = out_dtype or jnp.result_type(ell.blocks.dtype, h.dtype)
+    n, d = h.shape
+    if not use_kernel:
+        return spmm_blockell_ref(ell, h, out_dtype=out_dtype)
+    bd = bd or _pick_bd(d)
+    if d % bd != 0:
+        raise ValueError(f"D={d} not divisible by bd={bd}")
+    return spmm_blockell_kernel(
+        ell.indices,
+        ell.blocks,
+        h,
+        bd=bd,
+        out_dtype=out_dtype,
+        interpret=interpret,
+    )

@@ -1,0 +1,281 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ruff: noqa: E402  (the two lines above MUST precede any jax-touching import)
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  1. build the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. lower + compile the cell's step function (train_step / prefill_step /
+     serve_step) against ShapeDtypeStruct inputs with explicit
+     in/out_shardings — the production scan-over-layers form; print
+     memory_analysis() (proves it fits) and cost_analysis(),
+  3. recompile 1-period and 2-period model variants with every loop
+     unrolled (repro.runtime.cost_mode) and extrapolate exact per-device
+     FLOPs / bytes / collective bytes (XLA cost analysis counts loop
+     bodies once — see launch/roofline.py),
+  4. write a JSON artifact to experiments/dryrun/ for EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-4b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import math
+import time
+import traceback
+
+import jax
+
+from repro import runtime
+from repro.configs import ARCHS, SHAPES, get_config
+from repro.launch.inputs import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import costs_of, extrapolate, terms_from
+from repro.serve.engine import make_prefill_step, make_serve_step
+from repro.sharding import ctx as shard_ctx
+from repro.sharding.specs import (batch_axes, cache_sharding_tree,
+                                  data_sharding_tree, param_sharding_tree)
+from repro.train.loop import TrainConfig, make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))), "experiments", "dryrun")
+
+
+def cell_is_skipped(cfg, shape) -> str:
+    if shape.name == "long_500k" and not cfg.long_context_ok:
+        return ("skipped: pure full-attention arch; long_500k requires "
+                "sub-quadratic attention (DESIGN.md §Arch-applicability)")
+    return ""
+
+
+def shape_rules(mesh, shape, *, seq_parallel: bool = True):
+    """Logical-axis rule overrides per shape (activation sharding)."""
+    rules = {}
+    nb = math.prod(mesh.shape[a] for a in batch_axes(mesh))
+    if shape.global_batch % nb != 0 or shape.global_batch < nb:
+        rules["batch"] = None
+    if shape.name == "long_500k":
+        rules["kv_seq"] = tuple(mesh.axis_names)
+    if seq_parallel and shape.kind in ("train", "prefill") \
+            and shape.seq_len % mesh.shape["model"] == 0:
+        # Megatron-style sequence parallelism: the residual stream (and the
+        # activations the backward pass saves) is sharded over `model`
+        # between blocks; XLA inserts the all-gather/reduce-scatter pair
+        # around attention/MLP.  Without this the per-device saved
+        # activations of a 4k x 256 batch do not fit HBM.
+        rules["seq"] = "model"
+    return rules
+
+
+def compile_cell(cfg, shape, mesh, tcfg: TrainConfig):
+    """Lower + compile one cell on `mesh`; returns the compiled executable."""
+    specs = input_specs(cfg, shape, tcfg)
+    shard_ctx.set_mesh(mesh, shape_rules(mesh, shape))
+    try:
+        if shape.kind == "train":
+            step = make_train_step(cfg, tcfg)
+            params, state, batch = (specs["params"], specs["state"],
+                                    specs["batch"])
+            p_sh = param_sharding_tree(params, mesh)
+            s_sh = param_sharding_tree(state, mesh)  # m/v keys mirror params
+            b_sh = data_sharding_tree(batch, mesh, shape.global_batch)
+            fn = jax.jit(step, in_shardings=(p_sh, s_sh, b_sh),
+                         out_shardings=(p_sh, s_sh, None),
+                         donate_argnums=(0, 1))
+            lowered = fn.lower(params, state, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, max_len=shape.seq_len)
+            params, batch = specs["params"], specs["batch"]
+            batch.pop("targets", None)
+            batch.pop("mask", None)
+            p_sh = param_sharding_tree(params, mesh)
+            b_sh = data_sharding_tree(batch, mesh, shape.global_batch)
+            from repro.launch.inputs import abstract_cache
+            c_sh = cache_sharding_tree(abstract_cache(cfg, shape), mesh,
+                                       cfg, shape)
+            fn = jax.jit(step, in_shardings=(p_sh, b_sh),
+                         out_shardings=(None, c_sh))
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            step = make_serve_step(cfg)
+            params, token, cache = (specs["params"], specs["token"],
+                                    specs["cache"])
+            p_sh = param_sharding_tree(params, mesh)
+            t_sh = data_sharding_tree(token, mesh, shape.global_batch)
+            c_sh = cache_sharding_tree(cache, mesh, cfg, shape)
+            fn = jax.jit(step, in_shardings=(p_sh, t_sh, c_sh),
+                         out_shardings=(None, c_sh), donate_argnums=(2,))
+            lowered = fn.lower(params, token, cache)
+        return lowered.compile()
+    finally:
+        shard_ctx.clear_mesh()
+
+
+def _cost_variant(cfg, n_periods: int):
+    r = len(cfg.remainder_kinds)
+    return dataclasses.replace(cfg,
+                               n_layers=n_periods * cfg.period + r)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               tcfg: TrainConfig = None, verbose: bool = True,
+               causal_skip=None, skip_costs: bool = False,
+               cfg_overrides: dict = None, tcfg_overrides: dict = None):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = dataclasses.replace(cfg, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.shape.values())
+    if tcfg is None:
+        # Memory compile runs the production microbatched (grad-accum)
+        # step so saved activations fit HBM; cost compiles use
+        # microbatches=1 (totals are microbatch-invariant, and XLA counts
+        # loop bodies once — see roofline.py).
+        micro = 8 if shape.kind == "train" and shape.global_batch % 8 == 0 \
+            else 1
+        tcfg = TrainConfig(microbatches=micro, **(tcfg_overrides or {}))
+    if causal_skip is None:
+        # production prefill skips masked blocks (forward-only); train uses
+        # the masked scan -> cost model matches each path's real FLOPs
+        causal_skip = shape.kind == "prefill"
+
+    t0 = time.time()
+    compiled = compile_cell(cfg, shape, mesh, tcfg)
+    t_full = time.time() - t0
+    mem = compiled.memory_analysis()
+    raw = costs_of(compiled)
+    del compiled
+    gc.collect()
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "status": "ok", "chips": chips,
+        "compile_s": round(t_full, 1),
+        "causal_skip": bool(causal_skip),
+        "memory": {
+            "argument_bytes_per_device": getattr(
+                mem, "argument_size_in_bytes", None),
+            "output_bytes_per_device": getattr(
+                mem, "output_size_in_bytes", None),
+            "temp_bytes_per_device": getattr(
+                mem, "temp_size_in_bytes", None),
+            "alias_bytes_per_device": getattr(
+                mem, "alias_size_in_bytes", None),
+        },
+        "raw_scan_costs": raw,  # loop bodies counted once — NOT roofline
+    }
+
+    if not skip_costs:
+        # Unrolled-attention block count dominates SPMD-partitioner time on
+        # this 1-core container: cap the cost-model chunk count at ~8 per
+        # layer (FLOP totals are chunk-size invariant; causal-skip
+        # granularity coarsens accordingly — noted in EXPERIMENTS.md).
+        attn_chunk = max(2048, shape.seq_len // 8) \
+            if shape.kind != "decode" else None
+        cost_tcfg = dataclasses.replace(tcfg, microbatches=1)
+        with runtime.cost_mode(causal_skip=causal_skip,
+                               attn_chunk=attn_chunk):
+            c1 = costs_of(compile_cell(_cost_variant(cfg, 1), shape, mesh,
+                                       cost_tcfg))
+            gc.collect()
+            c2 = costs_of(compile_cell(_cost_variant(cfg, 2), shape, mesh,
+                                       cost_tcfg))
+            gc.collect()
+        costs = extrapolate(c1, c2, cfg.n_periods)
+        terms = terms_from(costs, cfg, shape, chips)
+        result["roofline"] = terms.summary()
+        result["cost_1p"] = c1
+        result["cost_2p"] = c2
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mesh_name}] "
+                  f"full-compile {t_full:.0f}s")
+            print("  memory_analysis:", mem)
+            print("  terms: compute=%.4fs memory=%.4fs collective=%.4fs "
+                  "-> %s (roofline frac %.3f)"
+                  % (terms.t_compute, terms.t_memory, terms.t_collective,
+                     terms.bottleneck, terms.roofline_fraction))
+    elif verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] compiled "
+              f"{t_full:.0f}s; memory:", mem)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (LM archs only)")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--skip-costs", action="store_true",
+                    help="memory/compile check only (no cost variants)")
+    ap.add_argument("--causal-skip", default=None,
+                    choices=(None, "on", "off"),
+                    help="override static causal block skipping in the "
+                         "cost model")
+    ap.add_argument("--tag", default="", help="artifact filename suffix")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--cast-params", action="store_true",
+                    help="§Perf: cast f32 params to bf16 once per step")
+    ap.add_argument("--remat-policy", default="nothing",
+                    choices=("nothing", "dots"))
+    ap.add_argument("--ssm-chunk", type=int, default=None,
+                    help="§Perf: override mamba2 SSD chunk length")
+    ap.add_argument("--ssm-bf16", action="store_true",
+                    help="§Perf: bf16 intra-chunk SSD quadratic")
+    args = ap.parse_args()
+    cfg_overrides = {}
+    if args.ssm_chunk:
+        cfg_overrides["ssm_chunk"] = args.ssm_chunk
+    if args.ssm_bf16:
+        cfg_overrides["ssm_bf16_intra"] = True
+    tcfg_overrides = {}
+    if args.cast_params:
+        tcfg_overrides["cast_params_once"] = True
+    if args.remat_policy != "nothing":
+        tcfg_overrides["remat_policy"] = args.remat_policy
+
+    archs = [a for a in ARCHS if a != "paper-gnn"] \
+        if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    os.makedirs(args.out, exist_ok=True)
+    causal_skip = None if args.causal_skip is None \
+        else args.causal_skip == "on"
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            tag = f"{arch}_{shape}_{mesh_name}{args.tag}"
+            path = os.path.join(args.out, tag + ".json")
+            try:
+                res = lower_cell(arch, shape, args.multi_pod,
+                                 causal_skip=causal_skip,
+                                 skip_costs=args.skip_costs,
+                                 cfg_overrides=cfg_overrides or None,
+                                 tcfg_overrides=tcfg_overrides or None)
+            except Exception as e:  # a failure here is a bug in the system
+                traceback.print_exc()
+                res = {"arch": arch, "shape": shape, "mesh": mesh_name,
+                       "status": "FAILED",
+                       "error": f"{type(e).__name__}: {e}"}
+                failures += 1
+            with open(path, "w") as f:
+                json.dump(res, f, indent=2)
+            print(f"wrote {path} ({res['status']})", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells FAILED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(cfg, shape)`` returns the abstract inputs the corresponding
+step function is lowered with:
+  train_*   -> (params f32, train-state, batch{tokens,targets,mask,...})
+  prefill_* -> (params bf16, batch{tokens,...})
+  decode_*  -> (params bf16, token, cache)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_cache, init_lm
+from repro.train.loop import TrainConfig, init_train_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    tree = jax.eval_shape(
+        functools.partial(init_lm, cfg=cfg), jax.random.PRNGKey(0))
+    if dtype is not None:
+        tree = jax.tree_util.tree_map(
+            lambda s: SDS(s.shape, dtype) if jnp.issubdtype(
+                s.dtype, jnp.floating) else s, tree)
+    return tree
+
+
+def abstract_train_state(cfg: ModelConfig, tcfg: TrainConfig):
+    params = abstract_params(cfg)
+    return params, jax.eval_shape(
+        functools.partial(init_train_state, tcfg=tcfg), params)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                train: bool = True) -> Dict[str, Any]:
+    b, s = shape.global_batch, shape.seq_len
+    n_text = s - cfg.vision_tokens
+    out: Dict[str, Any] = {"tokens": SDS((b, n_text), jnp.int32)}
+    if train:
+        out["targets"] = SDS((b, n_text), jnp.int32)
+        out["mask"] = SDS((b, n_text), jnp.float32)
+    if cfg.vision_tokens:
+        out["vision_embeds"] = SDS((b, cfg.vision_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    if cfg.encoder_layers:
+        out["enc_embeds"] = SDS((b, cfg.encoder_seq, cfg.d_model),
+                                jnp.bfloat16)
+    return out
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, shape.global_batch,
+                          shape.seq_len, dtype))
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig) -> Tuple:
+    token = SDS((shape.global_batch, 1), jnp.int32)
+    return token, abstract_cache(cfg, shape)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                tcfg: TrainConfig = None) -> Dict[str, Any]:
+    """All abstract inputs for the cell, keyed by role."""
+    tcfg = tcfg or TrainConfig()
+    if shape.kind == "train":
+        params, state = abstract_train_state(cfg, tcfg)
+        return {"params": params, "state": state,
+                "batch": batch_specs(cfg, shape, train=True)}
+    if shape.kind == "prefill":
+        return {"params": abstract_params(cfg, jnp.bfloat16),
+                "batch": batch_specs(cfg, shape, train=False)}
+    token, cache = decode_specs(cfg, shape)
+    return {"params": abstract_params(cfg, jnp.bfloat16),
+            "token": token, "cache": cache}

@@ -1,0 +1,33 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before any jax initialization).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2 pods x 256 = 512 chips (pod, data, model).
+
+    Uses the first `n` devices so a 512-placeholder-device dry-run process
+    can build the single-pod mesh too."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    n = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        devices=jax.devices()[:n])
+
+
+def make_local_mesh(shape=(1, 1), axes=("data", "model")):
+    """Degenerate mesh over however many devices exist (tests/smoke)."""
+    n = len(jax.devices())
+    if shape[0] * shape[1] > n:
+        shape = (1, 1)
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))

@@ -1,0 +1,96 @@
+"""Training launcher:  python -m repro.launch.train --arch <id> [...]
+
+On this CPU container it runs the reduced (smoke) config by default; on a
+real TPU slice the same entry point takes --full and the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import SHAPES, get_config, get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, lm_data_iter
+from repro.ft.checkpoint import Checkpointer
+from repro.ft.health import StragglerDetector
+from repro.models.transformer import init_lm
+from repro.sharding import ctx as shard_ctx
+from repro.sharding.specs import param_sharding_tree
+from repro.train.loop import (TrainConfig, init_train_state, make_train_step,
+                              train_loop)
+from repro.train.optimizer import OptConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--full", action="store_true",
+                    help="use the full card config (TPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--compression", default="none",
+                    choices=("none", "int8", "topk_ef"))
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else dataclasses.replace(
+        get_smoke_config(args.arch), dtype="float32")
+    base = SHAPES[args.shape]
+    shape = ShapeConfig("train",
+                        args.seq or (base.seq_len if args.full else 128),
+                        args.batch or (base.global_batch if args.full
+                                       else 8), "train")
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
+                      total_steps=args.steps),
+        microbatches=args.microbatches, compression=args.compression)
+
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    state = init_train_state(params, tcfg)
+    ck = Checkpointer(args.ckpt_dir) if args.ckpt_dir else None
+    start = 0
+    if ck and args.resume and ck.latest_step() is not None:
+        restored = ck.restore({"params": params, "state": state})
+        params, state = restored["params"], restored["state"]
+        start = ck.latest_step()
+        print(f"resumed from step {start}")
+
+    n_dev = len(jax.devices())
+    if n_dev > 1:
+        mesh = jax.make_mesh(
+            (n_dev // 2, 2), ("data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        shard_ctx.set_mesh(mesh)
+        sh = param_sharding_tree(params, mesh)
+        params = jax.device_put(params, sh)
+        state = jax.device_put(state, param_sharding_tree(state, mesh))
+
+    step = make_train_step(cfg, tcfg)
+    data = lm_data_iter(cfg, shape, DataConfig(seed=0), start_step=start)
+    det = StragglerDetector()
+
+    def cb(i, params, state, metrics):
+        if i % 10 == 0:
+            print(f"step {start + i:5d}  loss {float(metrics['loss']):.4f}"
+                  f"  lr {float(metrics['lr']):.2e}")
+
+    out = train_loop(params, state, step, data, args.steps,
+                     checkpointer=ck, ckpt_every=args.ckpt_every,
+                     health=det, callback=cb)
+    if ck:
+        ck.wait()
+    h = out["history"]
+    print(f"done: loss {h[0]['loss']:.4f} -> {h[-1]['loss']:.4f}; "
+          f"median step {det.median:.3f}s; stragglers {det.flags}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""GCN / GAT on the SpMM + SDDMM substrate — the paper's driving app.
+
+GCN layer:   H' = act( Â (H W) )           — one SpMM per layer (paper §2.1)
+GAT layer:   e = SDDMM(A, B, C) with d=2   — per paper §4.4, B/C hold source
+             /destination attention scores; then segment-softmax over each
+             row's edges and SpMM with the attention-weighted adjacency.
+
+The adjacency is carried in both Block-ELL (MXU path) and expanded-CSR
+(element path) forms; GCN uses Block-ELL SpMM, GAT's edge-granular
+softmax uses the CSR arrays (row_ids/col_ids/values).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper_gnn import GNNConfig
+from repro.core.formats import CSR, BlockELL
+from repro.core.sddmm import sddmm_coo
+from repro.core.spmm import csr_to_device_arrays, spmm_csr
+from repro.kernels.spmm.ref import spmm_blockell_ref
+from repro.models.layers import _he
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Device-side graph: normalized adjacency in two sparse forms."""
+    ell: BlockELL
+    row_ids: Any
+    col_ids: Any
+    values: Any
+    n_nodes: int
+
+    def tree_flatten(self):
+        return (self.ell, self.row_ids, self.col_ids, self.values), \
+            self.n_nodes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_nodes=aux)
+
+
+def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
+                normalize: bool = True) -> Graph:
+    """adj_dense: [N, N] 0/1.  GCN normalization Â = D^-1/2 (A+I) D^-1/2."""
+    n = adj_dense.shape[0]
+    a = adj_dense.astype(np.float32)
+    if normalize:
+        a = a + np.eye(n, dtype=np.float32)
+        deg = a.sum(1)
+        dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
+        a = a * dinv[:, None] * dinv[None, :]
+    csr = CSR.from_dense(a)
+    row_ids, col_ids, values = csr_to_device_arrays(csr)
+    ell = BlockELL.from_dense(a, bm=cfg.block_m, bn=cfg.block_n)
+    return Graph(ell=ell, row_ids=row_ids, col_ids=col_ids, values=values,
+                 n_nodes=n)
+
+
+# ---------------------------------------------------------------------------
+# GCN
+# ---------------------------------------------------------------------------
+
+
+def init_gcn(key, cfg: GNNConfig) -> Dict:
+    dims = [cfg.in_features] + [cfg.hidden] * (cfg.n_layers - 1) \
+        + [cfg.n_classes]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {"w": [_he(ks[i], (dims[i], dims[i + 1]))
+                  for i in range(cfg.n_layers)]}
+
+
+def gcn_forward(params, graph: Graph, x, *, use_blockell: bool = True):
+    h = x
+    for i, w in enumerate(params["w"]):
+        h = h @ w
+        if use_blockell:
+            h = spmm_blockell_ref(graph.ell, h)[: graph.n_nodes]
+        else:
+            h = spmm_csr(graph.row_ids, graph.col_ids, graph.values, h,
+                         graph.n_nodes)
+        if i < len(params["w"]) - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GAT (single head; attention scores via SDDMM with d=2, per the paper)
+# ---------------------------------------------------------------------------
+
+
+def init_gat(key, cfg: GNNConfig) -> Dict:
+    dims = [cfg.in_features] + [cfg.hidden] * (cfg.n_layers - 1) \
+        + [cfg.n_classes]
+    ks = jax.random.split(key, 3 * cfg.n_layers)
+    return {
+        "w": [_he(ks[3 * i], (dims[i], dims[i + 1]))
+              for i in range(cfg.n_layers)],
+        "a_src": [_he(ks[3 * i + 1], (dims[i + 1], 1))
+                  for i in range(cfg.n_layers)],
+        "a_dst": [_he(ks[3 * i + 2], (dims[i + 1], 1))
+                  for i in range(cfg.n_layers)],
+    }
+
+
+def _segment_softmax(scores, row_ids, n_rows):
+    mx = jax.ops.segment_max(scores, row_ids, num_segments=n_rows)
+    ex = jnp.exp(scores - mx[row_ids])
+    den = jax.ops.segment_sum(ex, row_ids, num_segments=n_rows)
+    return ex / jnp.maximum(den[row_ids], 1e-12)
+
+
+def gat_forward(params, graph: Graph, x):
+    h = x
+    n = graph.n_nodes
+    for i, w in enumerate(params["w"]):
+        h = h @ w
+        s_src = (h @ params["a_src"][i])[:, 0]  # [N]
+        s_dst = (h @ params["a_dst"][i])[:, 0]
+        # SDDMM with K=2 (paper §4.4): B=[s_src, 1], C=[[1],[s_dst]]
+        b = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)  # [N,2]
+        c = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=0)  # [2,N]
+        e = sddmm_coo(graph.row_ids, graph.col_ids, b, c)  # [nnz]
+        e = jax.nn.leaky_relu(e, 0.2)
+        alpha = _segment_softmax(e, graph.row_ids, n)
+        h = spmm_csr(graph.row_ids, graph.col_ids, alpha, h, n)
+        if i < len(params["w"]) - 1:
+            h = jax.nn.elu(h)
+    return h

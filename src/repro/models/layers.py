@@ -1,0 +1,257 @@
+"""Shared model building blocks (pure-functional, params as pytrees)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import attention as attn_lib
+
+
+def _he(key, shape, scale_dim=None):
+    scale_dim = scale_dim if scale_dim is not None else shape[0]
+    return jax.random.normal(key, shape, jnp.float32) / np.sqrt(scale_dim)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations / RoPE
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + w)).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(x.dtype)
+
+
+def activation(x, kind: str):
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu2":  # nemotron squared-ReLU
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(kind)
+
+
+def rope(x, positions, theta: float):
+    """Rotary embedding. x: [B, S, H, D]; positions: [B, S]."""
+    b, s, h, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (np.arange(0, half, dtype=np.float32) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B,S,half]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(
+        jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def sinusoid_positions(s: int, d: int):
+    pos = np.arange(s)[:, None]
+    dim = np.arange(0, d, 2)[None, :] / d
+    ang = pos / (10000.0 ** dim)
+    out = np.zeros((s, d), np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return jnp.asarray(out)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, cfg: ModelConfig, d: Optional[int] = None,
+             f: Optional[int] = None):
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"wi": _he(ks[0], (d, f)), "wo": _he(ks[1], (f, d))}
+    if cfg.gated_mlp:
+        p["wg"] = _he(ks[2], (d, f))
+    return p
+
+
+def mlp(p, x, cfg: ModelConfig):
+    h = x @ p["wi"].astype(x.dtype)
+    h = activation(h, cfg.act)
+    if cfg.gated_mlp:
+        h = h * (x @ p["wg"].astype(x.dtype))
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (self + cross), GQA, RoPE, cached decode
+# ---------------------------------------------------------------------------
+
+
+def init_attn(key, cfg: ModelConfig, cross: bool = False):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _he(ks[0], (d, hq * hd)),
+        "wk": _he(ks[1], (d, hkv * hd)),
+        "wv": _he(ks[2], (d, hkv * hd)),
+        "wo": _he(ks[3], (hq * hd, d), scale_dim=hq * hd),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def _qkv(p, x, kv_src, cfg: ModelConfig):
+    b, s, _ = x.shape
+    skv = kv_src.shape[1]
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ p["wq"].astype(x.dtype)
+    k = kv_src @ p["wk"].astype(x.dtype)
+    v = kv_src @ p["wv"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    return (q.reshape(b, s, hq, hd), k.reshape(b, skv, hkv, hd),
+            v.reshape(b, skv, hkv, hd))
+
+
+def self_attention(p, x, cfg: ModelConfig, *, kind: str, positions,
+                   causal: bool = True, dynamic_skip: bool = False):
+    """Full-sequence self attention (train / prefill).
+
+    ``dynamic_skip``: skip fully-masked causal kv blocks via a dynamic
+    trip-count loop — forward-only (not reverse-differentiable), used by
+    prefill; training uses the masked scan.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, x, x, cfg)
+    if cfg.family != "audio":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    blk = min(cfg.attn_block, s)
+    lblk = min(blk, cfg.window) if cfg.window else blk
+    if kind == "local" and s > cfg.window and s % lblk == 0 \
+            and cfg.window % lblk == 0:
+        out = attn_lib.local_block_attention(
+            q, k, v, window=cfg.window, block=lblk)
+    elif s % blk == 0 and s > max(blk, 2048):
+        # flash chunking only where the S^2 buffer actually threatens HBM;
+        # short sequences take the loop-free dense path (cheaper to
+        # partition, transient O(S^2) tile fits comfortably)
+        out = attn_lib.flash_attention(
+            q, k, v, causal=causal, q_chunk=blk, kv_chunk=blk,
+            skip_masked_blocks=dynamic_skip)
+    else:
+        window = cfg.window if kind == "local" else None
+        out = attn_lib.mha_reference(q, k, v, causal=causal, window=window)
+    return out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+
+def cross_attention(p, x, enc_kv, cfg: ModelConfig):
+    """Decoder->encoder attention; enc_kv = (k, v) precomputed [B,Se,Hkv,D].
+
+    Chunked over decoder positions (lax.map + checkpoint) so the
+    [B, S_dec, S_enc] score tensor never fully materializes.
+    """
+    from repro import runtime
+    b, s, _ = x.shape
+    hq, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(b, s, hq, hd)
+    k, v = enc_kv
+    n_kv = k.shape[2]
+    scale = 1.0 / np.sqrt(hd)
+    qg = q.reshape(b, s, n_kv, hq // n_kv, hd)
+
+    def one(q_blk):  # [B, c, Hkv, G, D]
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+        pr = jax.nn.softmax(logits, axis=-1)
+        o = jnp.einsum("bhgqk,bkhd->bqhgd", pr, v.astype(jnp.float32))
+        return o.reshape(o.shape[:2] + (hq * hd,)).astype(x.dtype)
+
+    chunk = min(cfg.attn_block, s)
+    if s % chunk or s == chunk:
+        out = one(qg)
+    else:
+        # python-unrolled chunks: nested lax loops inside the scanned
+        # period body explode SPMD-partitioner time at high device counts
+        nc = s // chunk
+        qc = qg.reshape(b, nc, chunk, n_kv, hq // n_kv, hd)
+        out = jnp.concatenate(
+            [jax.checkpoint(one)(qc[:, i]) for i in range(nc)], axis=1)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def encode_cross_kv(p, enc_states, cfg: ModelConfig):
+    b, se, _ = enc_states.shape
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_states @ p["wk"].astype(enc_states.dtype)).reshape(b, se, hkv, hd)
+    v = (enc_states @ p["wv"].astype(enc_states.dtype)).reshape(b, se, hkv, hd)
+    return (k, v)
+
+
+# -- cached decode -----------------------------------------------------------
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, kind: str,
+                    dtype):
+    """KV cache for one attention layer.
+
+    Local layers keep a ring buffer of ``window`` entries (the 500k-decode
+    memory win from the paper's technique: cache ∝ window, not seq).
+    """
+    size = min(max_len, cfg.window) if kind == "local" else max_len
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, size, hkv, hd), dtype),
+        "v": jnp.zeros((batch, size, hkv, hd), dtype),
+        "kpos": jnp.full((batch, size), -1, jnp.int32),
+    }
+
+
+def decode_self_attention(p, x, cache, cfg: ModelConfig, *, kind: str, pos):
+    """One-token decode with cache update. x: [B,1,d]; pos: scalar int32."""
+    b = x.shape[0]
+    q, k, v = _qkv(p, x, x, cfg)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    if cfg.family != "audio":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    size = cache["k"].shape[1]
+    slot = (pos % size).astype(jnp.int32) if kind == "local" else pos
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=1)
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"], jnp.full((b, 1), pos, jnp.int32), slot, axis=1)
+    # validity mask from stored absolute positions
+    valid = kpos >= 0
+    if kind == "local":
+        valid &= kpos > pos - cfg.window
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    n_kv = k_cache.shape[2]
+    hq = cfg.n_heads
+    qg = q.reshape(b, n_kv, hq // n_kv, cfg.head_dim).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg,
+                        k_cache.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, :], logits, attn_lib.NEG_INF)
+    pr = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", pr, v_cache.astype(jnp.float32))
+    out = out.reshape(b, 1, hq * cfg.head_dim).astype(x.dtype)
+    y = out @ p["wo"].astype(x.dtype)
+    return y, {"k": k_cache, "v": v_cache, "kpos": kpos}

@@ -1,0 +1,103 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+The Real-Gated Linear Recurrent Unit:
+    r_t = σ(W_a u_t + b_a)            (recurrence gate)
+    i_t = σ(W_i u_t + b_i)            (input gate)
+    a_t = exp(c · r_t · log σ(Λ))     (gated decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ u_t)
+
+Training runs the recurrence as an associative scan (O(log S) depth);
+decode is one multiply-add per token — sub-quadratic, so the
+recurrentgemma cell RUNS the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _he
+from repro.models.ssm import _causal_conv
+
+C_FACTOR = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ such that a^c = σ(Λ)^c is uniform in [0.9, 0.999] (Griffin init)
+    u = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9, 0.999)
+    a0 = u ** (1.0 / C_FACTOR)
+    lam = jnp.log(a0 / (1.0 - a0))
+    return {
+        "wx": _he(ks[0], (d, w)),
+        "wg": _he(ks[1], (d, w)),
+        "conv_w": jax.random.normal(ks[5], (cfg.conv_width, w),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "ga_w": _he(ks[2], (w, w)),
+        "ga_b": jnp.zeros((w,), jnp.float32),
+        "gi_w": _he(ks[3], (w, w)),
+        "gi_b": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": _he(ks[0], (w, d)),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["ga_w"].astype(u.dtype)
+                       + p["ga_b"].astype(u.dtype)).astype(jnp.float32)
+    i = jax.nn.sigmoid(u @ p["gi_w"].astype(u.dtype)
+                       + p["gi_b"].astype(u.dtype)).astype(jnp.float32)
+    log_a = C_FACTOR * r * (-jax.nn.softplus(-p["lam"]))  # c·r·logσ(Λ) ≤ 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    b = beta * (i * u.astype(jnp.float32))
+    return a, b
+
+
+def rglru_forward(p, x, cfg: ModelConfig, *, h0=None, conv_tail=None,
+                  return_state: bool = False):
+    """x: [B,S,d] -> [B,S,d]."""
+    u = x @ p["wx"].astype(x.dtype)
+    u, tail = _causal_conv(u, p["conv_w"], p["conv_b"], tail=conv_tail,
+                           act="none")
+    a, b = _gates(p, u)
+    if h0 is not None:
+        # fold carry-in state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return (al * ar, bl * ar + br)
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    g = jax.nn.gelu(x @ p["wg"].astype(x.dtype)).astype(jnp.float32)
+    y = (h * g).astype(x.dtype) @ p["out"].astype(x.dtype)
+    if return_state:
+        return y, {"h": h[:, -1], "conv": tail}
+    return y
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_decode_step(p, x, cache, cfg: ModelConfig):
+    """x: [B,1,d] -> [B,1,d] with O(1) state update."""
+    u = x @ p["wx"].astype(x.dtype)  # [B,1,w]
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), u], axis=1)
+    u1 = (jnp.einsum("bwc,wc->bc", window.astype(jnp.float32), p["conv_w"])
+          + p["conv_b"])[:, None, :].astype(x.dtype)
+    a, b = _gates(p, u1)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    g = jax.nn.gelu(x @ p["wg"].astype(x.dtype)).astype(jnp.float32)
+    y = (h[:, None] * g).astype(x.dtype) @ p["out"].astype(x.dtype)
+    return y, {"h": h, "conv": window[:, 1:].astype(cache["conv"].dtype)}

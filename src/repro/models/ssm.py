@@ -1,0 +1,224 @@
+"""Mamba-2 SSD (state-space duality) layer.
+
+Chunked SSD algorithm (Dao & Gu 2024): split the sequence into chunks;
+within a chunk the recurrence is materialized as a decay-masked
+attention-like quadratic form (MXU-friendly), across chunks a scan carries
+the [heads, head_dim, state] SSM state.  Decode is the O(1)/token
+recurrence — why the mamba2 cell RUNS the long_500k shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import _he, rms_norm
+from repro.sharding import shard_hint
+
+
+def init_ssm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * ds
+    ks = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32)
+                 * (np.log(0.1) - np.log(0.001)) + np.log(0.001))
+    return {
+        "in_proj": _he(ks[0], (d, 2 * di + 2 * ds + nh)),
+        "conv_w": jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt + jnp.log(-jnp.expm1(-dt)),  # inverse-softplus init
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": _he(ks[3], (di, d)),
+    }
+
+
+def _split_proj(p, x, cfg: ModelConfig):
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ p["in_proj"].astype(x.dtype)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * ds]
+    dt_raw = zxbcdt[..., 2 * di + 2 * ds:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, conv_w, conv_b, *, tail=None, act: str = "silu"):
+    """Depthwise causal conv over time. xbc: [B,S,C]; conv_w: [W,C]."""
+    w = conv_w.shape[0]
+    if tail is None:
+        pad = jnp.zeros(xbc.shape[:1] + (w - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+W-1, C]
+    out = sum(xp[:, i: i + xbc.shape[1]] * conv_w[i].astype(xbc.dtype)
+              for i in range(w))
+    out = out + conv_b.astype(xbc.dtype)
+    if act == "silu":
+        out = jax.nn.silu(out)
+    return out, xp[:, -(w - 1):] if w > 1 else None
+
+
+def ssd_chunked(xh, dt, a_log, b_mat, c_mat, *, chunk: int, init_state=None,
+                intra_dtype=jnp.float32):
+    """Chunked SSD scan.
+
+    xh: [B,S,H,P] inputs (head-split), dt: [B,S,H] (post-softplus),
+    b_mat/c_mat: [B,S,N] (ngroups=1 shared over heads).
+    Returns y: [B,S,H,P] and final state [B,H,P,N].
+
+    ``intra_dtype``: dtype of the intra-chunk quadratic operands (decay /
+    scores / dt-weighted inputs).  The recurrence statistics (cum, carry
+    state) stay f32 regardless; bf16 here halves the dominant memory
+    term (§Perf P8) at ~1e-2 relative output error.
+    """
+    bsz, s, h, pdim = xh.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    a = -jnp.exp(a_log)  # [H], negative
+    # log-decay per step
+    dta = dt * a  # [B,S,H]
+    xdt = xh * dt[..., None]  # dt-weighted input
+
+    xc = xdt.reshape(bsz, nc, chunk, h, pdim)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+    dtac = dta.reshape(bsz, nc, chunk, h)
+    cum = jnp.cumsum(dtac, axis=2)  # [B,nc,Q,H]
+
+    # intra-chunk quadratic (the "duality" matmul form).  The contraction
+    # order is forced: (scores ⊙ decay) first, then one matmul over k —
+    # a free-form 3-operand einsum let XLA pick paths that materialize a
+    # [B,nc,Q,K,H,P]-shaped intermediate at some chunk sizes (§Perf P6,
+    # first attempt: memory term *rose* 4.5x at chunk 64).
+    cd = intra_dtype
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc.astype(cd), bc.astype(cd),
+                        preferred_element_type=cd)  # [B,nc,Q,Q]
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # cum_q - cum_k
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(rel),
+                      0.0).astype(cd)
+    w = scores[..., None] * decay  # [B,nc,Q,K,H]
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", w, xc.astype(cd),
+                        preferred_element_type=jnp.float32)
+
+    # chunk states: sum_k exp(cum_last - cum_k) B_k x_k^T
+    seg = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc.astype(cd),
+                        seg.astype(cd), xc.astype(cd),
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence.  The scan carry and its per-chunk inputs must
+    # carry the SAME sharding (heads over `model`) or SPMD reshards
+    # state-sized tensors at every chunk step (§Perf P6/P7: ~170 MB/step
+    # against a 5 MB carry; full replication (P7) killed the resharding
+    # but paid gathers + a worse memory term — consistent H-sharding of
+    # both sides (P7b) keeps every step local AND sharded).
+    states = shard_hint(states, "batch", None, "heads", None, None)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])  # [B,nc,H]
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, pdim, n), jnp.float32)
+    init_state = shard_hint(init_state, "batch", "heads", None, None)
+
+    def scan_body(carry, inp):
+        st = carry
+        new_st, dec = inp
+        out_prev = st
+        st = st * dec[:, :, None, None] + new_st
+        return st, out_prev
+
+    states_t = states.astype(jnp.float32).transpose(1, 0, 2, 3, 4)
+    decay_t = chunk_decay.astype(jnp.float32).transpose(1, 0, 2)
+    from repro import runtime
+    if runtime.unrolled():
+        st = init_state
+        prevs = []
+        for c in range(nc):
+            st, prev = scan_body(st, (states_t[c], decay_t[c]))
+            prevs.append(prev)
+        final_state = st
+        prev_states = jnp.stack(prevs, axis=1)  # [B,nc,H,P,N]
+    else:
+        final_state, prev_states = jax.lax.scan(
+            scan_body, init_state, (states_t, decay_t))
+        prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,nc,H,P,N]
+
+    # inter-chunk contribution: C_q · (decayed carry-in state)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc.astype(cd),
+                       jnp.exp(cum).astype(cd), prev_states.astype(cd),
+                       preferred_element_type=jnp.float32)
+    y = (y_diag + y_off).reshape(bsz, s, h, pdim)
+    return y, final_state
+
+
+def ssm_forward(p, x, cfg: ModelConfig, *, init_state=None, conv_tail=None,
+                return_state: bool = False):
+    """Full-sequence SSD block. x: [B,S,d] -> [B,S,d]."""
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    bsz, s, _ = x.shape
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    xbc, tail = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail=conv_tail)
+    xh = xbc[..., :di].reshape(bsz, s, nh, hd)
+    b_mat = xbc[..., di: di + ds]
+    c_mat = xbc[..., di + ds:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"])  # [B,S,H]
+    xh = shard_hint(xh, "batch", "seq", "heads", None)
+    chunk = min(cfg.ssm_chunk, s)
+    while s % chunk:  # largest divisor of s not exceeding the target
+        chunk -= 1
+    y, state = ssd_chunked(
+        xh.astype(jnp.float32), dt, p["A_log"],
+        b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+        chunk=chunk, init_state=init_state,
+        intra_dtype=jnp.bfloat16 if cfg.ssm_bf16_intra else jnp.float32)
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, {"state": state, "conv": tail}
+    return out
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype):
+    di, ds = cfg.d_inner, cfg.ssm_state
+    return {
+        "state": jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, ds),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di + 2 * ds), dtype),
+    }
+
+
+def ssm_decode_step(p, x, cache, cfg: ModelConfig):
+    """One-token recurrence. x: [B,1,d]."""
+    di, ds, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    bsz = x.shape[0]
+    z, xbc, dt_raw = _split_proj(p, x, cfg)
+    # conv over [tail, current]
+    window = jnp.concatenate([cache["conv"].astype(x.dtype), xbc], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(conv_out)[:, None, :].astype(x.dtype)
+    xh = xbc1[..., :di].reshape(bsz, nh, hd).astype(jnp.float32)
+    b_mat = xbc1[:, 0, di: di + ds].astype(jnp.float32)
+    c_mat = xbc1[:, 0, di + ds:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a)  # [B,H]
+    state = cache["state"] * da[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, b_mat)
+    y = jnp.einsum("bhpn,bn->bhp", state, c_mat)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(x.dtype)
+    new_cache = {"state": state,
+                 "conv": window[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

@@ -1,0 +1,494 @@
+"""Config-driven LM: dense / MoE / SSM / hybrid / enc-dec / VLM.
+
+Layer stacking: the layer pattern (cfg.layer_pattern) repeats down the
+stack; whole periods are stacked and applied under ``lax.scan`` so compiled
+HLO is O(period), not O(n_layers); a partial trailing period ("remainder")
+is applied unrolled.  Every block kind threads an optional cache entry so
+the same code path serves train (no cache), prefill (build cache) and
+decode (consume + update cache).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import runtime
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.rglru import (init_rglru, init_rglru_cache,
+                                rglru_decode_step, rglru_forward)
+from repro.models.ssm import (init_ssm, init_ssm_cache, ssm_decode_step,
+                              ssm_forward)
+from repro.sharding import shard_hint
+
+ATTN_KINDS = ("attn", "local", "moe")
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _init_block(key, kind: str, cfg: ModelConfig, cross: bool = False):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), jnp.float32)}
+    if kind in ATTN_KINDS:
+        p["attn"] = L.init_attn(ks[0], cfg)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        if kind == "moe":
+            p["moe"] = init_moe(ks[1], cfg)
+        else:
+            p["mlp"] = L.init_mlp(ks[1], cfg)
+    elif kind == "ssm":
+        p["ssm"] = init_ssm(ks[0], cfg)
+    elif kind == "rglru":
+        p["rec"] = init_rglru(ks[0], cfg)
+        p["ln2"] = jnp.zeros((d,), jnp.float32)
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["lnx"] = jnp.zeros((d,), jnp.float32)
+        p["xattn"] = L.init_attn(ks[2], cfg, cross=True)
+    return p
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_layers + 8)
+    cross = cfg.encoder_layers > 0
+    period_params = []
+    for i in range(cfg.n_periods):
+        blocks = tuple(
+            _init_block(keys[i * cfg.period + j], kind, cfg, cross=cross)
+            for j, kind in enumerate(cfg.layer_pattern))
+        period_params.append(blocks)
+    params: Dict[str, Any] = {
+        "embed": jax.random.normal(
+            keys[-1], (cfg.vocab_size, cfg.d_model), jnp.float32)
+        / np.sqrt(cfg.d_model),
+        "periods": _stack(period_params) if period_params else (),
+        "remainder": tuple(
+            _init_block(keys[cfg.n_periods * cfg.period + j], kind, cfg,
+                        cross=cross)
+            for j, kind in enumerate(cfg.remainder_kinds)),
+        "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L._he(keys[-2], (cfg.d_model, cfg.vocab_size))
+    if cfg.vision_tokens:
+        params["vision_proj"] = L._he(keys[-3], (cfg.d_model, cfg.d_model))
+    if cfg.encoder_layers:
+        enc_blocks = tuple(
+            _init_block(keys[-4 - j], "attn", cfg) for j in
+            range(cfg.encoder_layers))
+        params["encoder"] = {
+            "blocks": _stack(enc_blocks),
+            "final_ln": jnp.zeros((cfg.d_model,), jnp.float32),
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application (full sequence: train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _apply_block(p, x, kind: str, cfg: ModelConfig, *, positions,
+                 enc_out=None, mode: str = "train",
+                 max_len: Optional[int] = None):
+    """Returns (x, cache_entry_or_None, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache_entry = None
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        if mode == "prefill":
+            y, cache_entry = _prefill_self_attention(
+                p["attn"], h, cfg, kind=kind, positions=positions,
+                max_len=max_len)
+        else:
+            y = L.self_attention(p["attn"], h, cfg, kind=kind,
+                                 positions=positions)
+        x = x + y
+        if enc_out is not None:
+            hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            enc_kv = L.encode_cross_kv(p["xattn"], enc_out, cfg)
+            x = x + L.cross_attention(p["xattn"], hx, enc_kv, cfg)
+            if mode == "prefill":
+                cache_entry = {"self": cache_entry, "enc_k": enc_kv[0],
+                               "enc_v": enc_kv[1]}
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            y2, aux = moe_ffn(p["moe"], h2, cfg)
+        else:
+            y2 = L.mlp(p["mlp"], h2, cfg)
+        x = x + y2
+    elif kind == "ssm":
+        if mode == "prefill":
+            y, cache_entry = ssm_forward(p["ssm"], h, cfg, return_state=True)
+        else:
+            y = ssm_forward(p["ssm"], h, cfg)
+        x = x + y
+    elif kind == "rglru":
+        if mode == "prefill":
+            y, cache_entry = rglru_forward(p["rec"], h, cfg,
+                                           return_state=True)
+        else:
+            y = rglru_forward(p["rec"], h, cfg)
+        x = x + y
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h2, cfg)
+    x = shard_hint(x, "batch", "seq", "embed")
+    return x, cache_entry, aux
+
+
+def _prefill_self_attention(p, x, cfg: ModelConfig, *, kind: str, positions,
+                            max_len: int):
+    """Full-sequence attention that also materializes the decode cache."""
+    b, s, _ = x.shape
+    q, k, v = L._qkv(p, x, x, cfg)
+    if cfg.family != "audio":
+        q = L.rope(q, positions, cfg.rope_theta)
+        k = L.rope(k, positions, cfg.rope_theta)
+    blk = min(cfg.attn_block, s)
+    from repro.core import attention as attn_lib
+    lblk = min(blk, cfg.window) if cfg.window else blk
+    if kind == "local" and s > cfg.window and s % lblk == 0 \
+            and cfg.window % lblk == 0:
+        out = attn_lib.local_block_attention(
+            q, k, v, window=cfg.window, block=lblk)
+    elif s % blk == 0 and s > max(blk, 2048):
+        # prefill is forward-only: dynamic causal block skipping is legal
+        out = attn_lib.flash_attention(q, k, v, causal=True, q_chunk=blk,
+                                       kv_chunk=blk, skip_masked_blocks=True)
+    else:
+        window = cfg.window if kind == "local" else None
+        out = attn_lib.mha_reference(q, k, v, causal=True, window=window)
+    y = out.reshape(b, s, -1) @ p["wo"].astype(x.dtype)
+
+    size = min(max_len, cfg.window) if kind == "local" else max_len
+    take = min(s, size)
+    k_tail, v_tail = k[:, -take:], v[:, -take:]
+    pos_tail = positions[:, -take:]
+    slots = pos_tail[0] % size if kind == "local" else pos_tail[0]
+    kc = jnp.zeros((b, size) + k.shape[2:], k.dtype).at[:, slots].set(k_tail)
+    vc = jnp.zeros((b, size) + v.shape[2:], v.dtype).at[:, slots].set(v_tail)
+    kpos = jnp.full((b, size), -1, jnp.int32).at[:, slots].set(pos_tail)
+    return y, {"k": kc, "v": vc, "kpos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# Decode block application
+# ---------------------------------------------------------------------------
+
+
+def _decode_block(p, x, cache_entry, kind: str, cfg: ModelConfig, *, pos):
+    h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if kind in ATTN_KINDS:
+        self_cache = cache_entry["self"] if "enc_k" in cache_entry \
+            else cache_entry
+        y, new_self = L.decode_self_attention(p["attn"], h, self_cache, cfg,
+                                              kind=kind, pos=pos)
+        x = x + y
+        if "enc_k" in cache_entry:
+            hx = L.rms_norm(x, p["lnx"], cfg.norm_eps)
+            x = x + L.cross_attention(
+                p["xattn"], hx, (cache_entry["enc_k"], cache_entry["enc_v"]),
+                cfg)
+            new_cache = dict(cache_entry)
+            new_cache["self"] = new_self
+        else:
+            new_cache = new_self
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        if kind == "moe":
+            y2, _ = moe_ffn(p["moe"], h2, cfg)
+        else:
+            y2 = L.mlp(p["mlp"], h2, cfg)
+        x = x + y2
+    elif kind == "ssm":
+        y, new_cache = ssm_decode_step(p["ssm"], h, cache_entry, cfg)
+        x = x + y
+    elif kind == "rglru":
+        y, new_cache = rglru_decode_step(p["rec"], h, cache_entry, cfg)
+        x = x + y
+        h2 = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h2, cfg)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params, cfg: ModelConfig, tokens, vision_embeds=None,
+                  dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[tokens]
+    if cfg.vision_tokens and vision_embeds is not None:
+        vproj = vision_embeds.astype(dtype) @ params["vision_proj"].astype(
+            dtype)
+        x = jnp.concatenate([vproj, x], axis=1)
+    if cfg.family == "audio":
+        x = x + L.sinusoid_positions(x.shape[1], cfg.d_model).astype(dtype)
+    return shard_hint(x, "batch", "seq", "embed")
+
+
+def _run_encoder(params, cfg: ModelConfig, enc_embeds):
+    """Whisper encoder over (stubbed) frame embeddings [B, Se, d]."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = enc_embeds.astype(dtype)
+    x = x + L.sinusoid_positions(x.shape[1], cfg.d_model).astype(dtype)
+    b, se, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+
+    def body(x, blk_p):
+        h = L.rms_norm(x, blk_p["ln1"], cfg.norm_eps)
+        y = L.self_attention(blk_p["attn"], h, cfg, kind="attn",
+                             positions=positions, causal=False)
+        x = x + y
+        h2 = L.rms_norm(x, blk_p["ln2"], cfg.norm_eps)
+        x = x + L.mlp(blk_p["mlp"], h2, cfg)
+        return x, None
+
+    body_r = jax.checkpoint(body,
+                            policy=jax.checkpoint_policies.nothing_saveable)
+    if runtime.unrolled():
+        for i in range(cfg.encoder_layers):
+            blk_p = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                           params["encoder"]["blocks"])
+            x, _ = body_r(x, blk_p)
+    else:
+        x, _ = jax.lax.scan(body_r, x, params["encoder"]["blocks"])
+    return L.rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def forward_hidden(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
+                   enc_embeds=None, mode: str = "train",
+                   max_len: Optional[int] = None, remat: bool = True,
+                   remat_policy: str = "nothing"):
+    """Returns (hidden [B,S,d], cache_or_None, aux_loss)."""
+    x = _embed_inputs(params, cfg, tokens, vision_embeds)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_out = None
+    if cfg.encoder_layers and enc_embeds is not None:
+        enc_out = _run_encoder(params, cfg, enc_embeds)
+
+    def period_body(carry, period_p):
+        x, aux = carry
+        caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, ce, a = _apply_block(period_p[j], x, kind, cfg,
+                                    positions=positions, enc_out=enc_out,
+                                    mode=mode, max_len=max_len)
+            aux = aux + a
+            caches.append(ce)
+        return (x, aux), tuple(caches)
+
+    body = period_body
+    if remat and mode == "train":
+        policy = (jax.checkpoint_policies.dots_saveable
+                  if remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(period_body, policy=policy)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    if cfg.n_periods and runtime.unrolled():
+        carry = (x, aux0)
+        pcs = []
+        for i in range(cfg.n_periods):
+            period_p = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                              params["periods"])
+            carry, pc = body(carry, period_p)
+            pcs.append(pc)
+        (x, aux) = carry
+        period_caches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *pcs) if pcs and mode == "prefill" \
+            else ()
+    elif cfg.n_periods:
+        (x, aux), period_caches = jax.lax.scan(
+            body, (x, aux0), params["periods"])
+    else:
+        aux, period_caches = aux0, ()
+
+    rem_caches = []
+    for j, kind in enumerate(cfg.remainder_kinds):
+        x, ce, a = _apply_block(params["remainder"][j], x, kind, cfg,
+                                positions=positions, enc_out=enc_out,
+                                mode=mode, max_len=max_len)
+        aux = aux + a
+        rem_caches.append(ce)
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    cache = None
+    if mode == "prefill":
+        cache = {"periods": period_caches, "remainder": tuple(rem_caches),
+                 "pos": jnp.asarray(s, jnp.int32)}
+    return x, cache, aux
+
+
+def _lm_head(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def chunked_ce_loss(hidden, head_w, targets, mask, *, chunk: int = 1024):
+    """Cross-entropy computed per sequence chunk so [B,S,V] logits are
+    never materialized (V can be 262k).  hidden: [B,S,d]."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    nc = s // chunk
+    hc = hidden.reshape(b, nc, chunk, d).transpose(1, 0, 2, 3)
+    tc = targets.reshape(b, nc, chunk).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, chunk).transpose(1, 0, 2)
+
+    def one(args):
+        h, t, m = args
+        logits = (h.astype(jnp.float32)
+                  @ head_w.astype(jnp.float32))  # [B,chunk,V]
+        logits = shard_hint(logits, "batch", None, "vocab")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m
+        return nll.sum(), m.sum()
+
+    if runtime.unrolled():
+        parts = [jax.checkpoint(one)(
+            (hc[i], tc[i], mc[i])) for i in range(nc)]
+        nll = sum(p[0] for p in parts)
+        cnt = sum(p[1] for p in parts)
+        return nll / jnp.maximum(cnt, 1.0)
+    nll, cnt = jax.lax.map(jax.checkpoint(one), (hc, tc, mc))
+    return nll.sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+def lm_loss(params, cfg: ModelConfig, batch, *, aux_weight: float = 0.01,
+            remat: bool = True, remat_policy: str = "nothing"):
+    """batch: dict(tokens[B,S], targets[B,S], mask[B,S], vision_embeds?,
+    enc_embeds?)."""
+    hidden, _, aux = forward_hidden(
+        params, cfg, batch["tokens"],
+        vision_embeds=batch.get("vision_embeds"),
+        enc_embeds=batch.get("enc_embeds"), mode="train", remat=remat,
+        remat_policy=remat_policy)
+    if cfg.vision_tokens:
+        hidden = hidden[:, cfg.vision_tokens:]
+    loss = chunked_ce_loss(hidden, _lm_head(params, cfg), batch["targets"],
+                           batch["mask"].astype(jnp.float32))
+    return loss + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving entry points
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+
+    def entry(kind):
+        if kind in ATTN_KINDS:
+            c = L.init_attn_cache(cfg, batch, max_len, kind, dtype)
+            if cfg.encoder_layers:
+                hkv, hd = cfg.n_kv_heads, cfg.head_dim
+                c = {"self": c,
+                     "enc_k": jnp.zeros((batch, cfg.encoder_seq, hkv, hd),
+                                        dtype),
+                     "enc_v": jnp.zeros((batch, cfg.encoder_seq, hkv, hd),
+                                        dtype)}
+            return c
+        if kind == "ssm":
+            return init_ssm_cache(cfg, batch, dtype)
+        if kind == "rglru":
+            return init_rglru_cache(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    period = tuple(entry(k) for k in cfg.layer_pattern)
+    periods = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_periods,) + x.shape), period) \
+        if cfg.n_periods else ()
+    remainder = tuple(entry(k) for k in cfg.remainder_kinds)
+    return {"periods": periods, "remainder": remainder,
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int, *,
+            vision_embeds=None, enc_embeds=None):
+    """Returns (last-token logits [B,V], cache)."""
+    hidden, cache, _ = forward_hidden(
+        params, cfg, tokens, vision_embeds=vision_embeds,
+        enc_embeds=enc_embeds, mode="prefill", max_len=max_len, remat=False)
+    last = hidden[:, -1]
+    logits = last.astype(jnp.float32) @ _lm_head(params, cfg).astype(
+        jnp.float32)
+
+    # stack per-period caches gathered from the scan's ys
+    def fix(c):
+        return c
+
+    cache = jax.tree_util.tree_map(fix, cache)
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache):
+    """token: [B,1] int32.  Returns (logits [B,V], new cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dtype)[token]
+    pos = cache["pos"]
+    if cfg.family == "audio":
+        half = np.arange(0, cfg.d_model, 2) / cfg.d_model
+        ang = pos.astype(jnp.float32) / (10000.0 ** jnp.asarray(half,
+                                                                jnp.float32))
+        pe = jnp.zeros((cfg.d_model,), jnp.float32)
+        pe = pe.at[0::2].set(jnp.sin(ang)).at[1::2].set(jnp.cos(ang))
+        x = x + pe.astype(dtype)
+
+    def period_body(x, scanned):
+        period_p, period_c = scanned
+        new_caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            x, nc = _decode_block(period_p[j], x, period_c[j], kind, cfg,
+                                  pos=pos)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    if cfg.n_periods and runtime.unrolled():
+        pcs = []
+        for i in range(cfg.n_periods):
+            scanned = jax.tree_util.tree_map(
+                lambda a, i=i: a[i], (params["periods"], cache["periods"]))
+            x, pc = period_body(x, scanned)
+            pcs.append(pc)
+        new_periods = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pcs)
+    elif cfg.n_periods:
+        x, new_periods = jax.lax.scan(
+            period_body, x, (params["periods"], cache["periods"]))
+    else:
+        new_periods = ()
+
+    new_rem = []
+    for j, kind in enumerate(cfg.remainder_kinds):
+        x, nc = _decode_block(params["remainder"][j], x,
+                              cache["remainder"][j], kind, cfg, pos=pos)
+        new_rem.append(nc)
+
+    x = L.rms_norm(x, params["final_ln"], cfg.norm_eps)
+    logits = x[:, 0].astype(jnp.float32) @ _lm_head(params, cfg).astype(
+        jnp.float32)
+    logits = shard_hint(logits, "batch", "vocab")
+    new_cache = {"periods": new_periods, "remainder": tuple(new_rem),
+                 "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,50 @@
+"""Global execution-mode flags (cost-model compiles vs production).
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count (verified empirically — see DESIGN.md §6 / EXPERIMENTS.md §Method).
+The production path uses lax.scan over layer periods (small HLO, fast
+compiles, exact memory analysis), which would silently under-report
+FLOPs/bytes/collectives.  For roofline extraction the dry-run therefore
+recompiles a 1-period and a 2-period variant of the model in COST MODE —
+all loops unrolled to straight-line HLO so cost_analysis is exact — and
+extrapolates:  cost(n) = cost(1p) + (n-1) * (cost(2p) - cost(1p)).
+
+``cost_mode()`` flips every loop site (period scan, flash-attention chunk
+loops, chunked CE, SSD chunk scan, whisper encoder stack) to its unrolled
+form.  ``causal_skip`` additionally enables static causal block skipping
+in unrolled flash attention (q-chunk i only visits kv-chunks 0..i) — the
+§Perf optimization measured against the masked-all-blocks baseline.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+_state = threading.local()
+
+
+def unrolled() -> bool:
+    return getattr(_state, "unroll", False)
+
+
+def causal_skip() -> bool:
+    return getattr(_state, "causal_skip", False)
+
+
+def attn_chunk_override() -> Optional[int]:
+    return getattr(_state, "attn_chunk", None)
+
+
+@contextlib.contextmanager
+def cost_mode(*, causal_skip: bool = False,
+              attn_chunk: Optional[int] = None):
+    prev = (getattr(_state, "unroll", False),
+            getattr(_state, "causal_skip", False),
+            getattr(_state, "attn_chunk", None))
+    _state.unroll, _state.causal_skip, _state.attn_chunk = \
+        True, causal_skip, attn_chunk
+    try:
+        yield
+    finally:
+        _state.unroll, _state.causal_skip, _state.attn_chunk = prev

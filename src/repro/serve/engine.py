@@ -1,0 +1,95 @@
+"""Batched serving engine: prefill + decode with a pytree KV cache.
+
+``ServingEngine`` drives the model's prefill/decode entry points for a
+batch of requests with continuous greedy/temperature decoding; the same
+``decode_step``/``prefill`` functions are what the dry-run lowers for the
+``decode_*``/``prefill_*`` shape cells.
+
+Long-context (500k) decode shards the KV cache over mesh axes via the
+logical-axis rules ("kv_seq"); see launch/dryrun.py shape policies.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int = 2048
+    temperature: float = 0.0  # 0 => greedy
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, params, cfg: ModelConfig, scfg: ServeConfig):
+        self.params = params
+        self.cfg = cfg
+        self.scfg = scfg
+        self._prefill = jax.jit(
+            lambda p, toks, **kw: prefill(p, cfg, toks, scfg.max_len, **kw))
+        self._decode = jax.jit(
+            lambda p, tok, cache: decode_step(p, cfg, tok, cache))
+        self._key = jax.random.PRNGKey(scfg.seed)
+
+    def _sample(self, logits):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, prompts: np.ndarray, n_new: int, *,
+                 vision_embeds=None, enc_embeds=None) -> np.ndarray:
+        """prompts: [B, S_prompt] int32 -> [B, n_new] generated tokens."""
+        kw = {}
+        if vision_embeds is not None:
+            kw["vision_embeds"] = vision_embeds
+        if enc_embeds is not None:
+            kw["enc_embeds"] = enc_embeds
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts), **kw)
+        toks = []
+        tok = self._sample(logits)[:, None]
+        toks.append(tok)
+        for _ in range(n_new - 1):
+            logits, cache = self._decode(self.params, tok, cache)
+            tok = self._sample(logits)[:, None]
+            toks.append(tok)
+        return np.asarray(jnp.concatenate(toks, axis=1))
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int):
+    """Lowerable prefill entry (the prefill_* dry-run cells).
+
+    Takes the batch as a dict so modality side-inputs can never be
+    positionally confused (a vision_embeds/enc_embeds swap silently drops
+    the whisper encoder — caught by the multi-pod dry-run's out_shardings
+    structure check).
+    """
+
+    def prefill_step(params, batch):
+        kw = {}
+        if cfg.vision_tokens and "vision_embeds" in batch:
+            kw["vision_embeds"] = batch["vision_embeds"]
+        if cfg.encoder_layers and "enc_embeds" in batch:
+            kw["enc_embeds"] = batch["enc_embeds"]
+        logits, cache = prefill(params, cfg, batch["tokens"], max_len, **kw)
+        return logits, cache
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Lowerable single-token decode entry (the decode_* dry-run cells)."""
+
+    def serve_step(params, token, cache):
+        return decode_step(params, cfg, token, cache)
+
+    return serve_step

@@ -1,0 +1,63 @@
+"""Gradient compression for cross-pod reduction.
+
+At 1000+ node scale the inter-pod (DCN) all-reduce dominates step time for
+DP-heavy configs.  Two standard compressors, both with exact shape-
+preserving decompress so they drop into the train step between grad
+computation and the optimizer:
+
+  * int8 stochastic-free symmetric quantization (8x volume reduction on
+    the wire; here modeled as a quantize->dequantize round trip).
+  * top-k with error feedback: only the largest k-fraction of entries are
+    reduced; the residual is fed back next step so the compressor is
+    contractive (EF-SGD / Deep Gradient Compression).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_roundtrip(g):
+    """Symmetric per-tensor int8 quantize -> dequantize."""
+    a = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(a, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8(grads):
+    return jax.tree_util.tree_map(int8_roundtrip, grads)
+
+
+def _topk_one(g, residual, k_frac: float):
+    acc = g.astype(jnp.float32) + residual
+    flat = acc.reshape(-1)
+    k = max(1, int(flat.shape[0] * k_frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = (jnp.abs(flat) >= thresh).astype(jnp.float32)
+    sent = flat * mask
+    new_residual = (flat - sent).reshape(g.shape)
+    return sent.reshape(g.shape), new_residual
+
+
+def init_residual(params):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros_like(x, dtype=jnp.float32), params)
+
+
+def compress_topk_ef(grads, residual, k_frac: float = 0.05):
+    """Top-k sparsification with error feedback.
+
+    Returns (compressed grads, new residual).  The compressed tensor is
+    dense-shaped but k-sparse — on the wire it would ship (indices,
+    values); volume ratio ~ 2*k_frac of dense.
+    """
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    outs = [_topk_one(g, r, k_frac) for g, r in zip(flat_g, flat_r)]
+    sent = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    new_res = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return sent, new_res

@@ -1,0 +1,10 @@
+# NOTE: deliberately does NOT set --xla_force_host_platform_device_count.
+# Unit/smoke tests run on the single real CPU device; distributed tests
+# spawn subprocesses with their own XLA_FLAGS (tests/test_distributed.py).
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,66 @@
+"""Roofline extraction: HLO collective parsing + extrapolation algebra."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch.roofline import (RooflineTerms, collective_bytes, costs_of,
+                                   extrapolate, model_flops_for,
+                                   weighted_collective_bytes)
+
+HLO = """
+ENTRY %main {
+  %ag = f32[128,512]{1,0} all-gather(%x), replica_groups=[2,4]<=[8]
+  %ar = bf16[1024]{0} all-reduce(%y), to_apply=%add
+  %rs = f32[64,64]{1,0} reduce-scatter(%z), dimensions={0}
+  %a2a = f32[16,16]{1,0} all-to-all(%w)
+  %cp = bf16[32]{0} collective-permute(%v)
+  %agd = f32[9,9]{1,0} all-gather-done(%h)
+  %ags = (f32[10]{0}, f32[10]{0}) all-gather-start(%g)
+}
+"""
+
+
+def test_collective_bytes_parses_result_shapes():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 128 * 512 * 4 + 10 * 4  # + start tuple / 2
+    assert out["all-reduce"] == 1024 * 2
+    assert out["reduce-scatter"] == 64 * 64 * 4
+    assert out["all-to-all"] == 16 * 16 * 4
+    assert out["collective-permute"] == 32 * 2
+
+
+def test_weighted_bytes_doubles_allreduce():
+    w = weighted_collective_bytes({"all-reduce": 10, "all-gather": 4})
+    assert w == 24
+
+
+def test_extrapolation_linear():
+    c1 = {"flops": 10.0, "bytes": 100.0, "coll": {"all-reduce": 1.0}}
+    c2 = {"flops": 16.0, "bytes": 130.0, "coll": {"all-reduce": 1.5,
+                                                  "all-gather": 2.0}}
+    out = extrapolate(c1, c2, n_periods=5)
+    assert out["flops"] == 10 + 4 * 6
+    assert out["bytes"] == 100 + 4 * 30
+    assert out["coll"]["all-reduce"] == 1.0 + 4 * 0.5
+    assert out["coll"]["all-gather"] == 8.0  # 0 + 4*2
+
+
+def test_terms_and_bottleneck():
+    t = RooflineTerms(
+        flops_per_chip=197e12, bytes_per_chip=819e9 * 2,
+        collective_bytes_per_chip=50e9 * 0.5,
+        per_op_collectives={}, chips=256, model_flops=197e12 * 256 * 0.5)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 2.0) < 1e-9
+    assert abs(t.t_collective - 0.5) < 1e-9
+    assert t.bottleneck == "memory"
+    assert abs(t.roofline_fraction - 0.25) < 1e-9
+
+
+def test_model_flops_train_vs_decode():
+    cfg = get_config("gemma3-4b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"])
+    dec = model_flops_for(cfg, SHAPES["decode_32k"])
+    n = cfg.active_param_count()
+    assert tr == pytest.approx(6.0 * n * 256 * 4096)
+    assert dec == pytest.approx(2.0 * n * 128)

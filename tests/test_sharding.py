@@ -1,0 +1,94 @@
+"""Sharding policy unit tests (no multi-device needed: specs only)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.inputs import abstract_cache, abstract_params
+from repro.sharding import ctx as shard_ctx
+from repro.sharding.specs import cache_spec, param_spec
+
+
+@pytest.fixture
+def mesh():
+    # a 1x1 mesh carries the axis names without needing fake devices
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+def _spec_of(tree, keypath, mesh):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        keys = [p.key for p in path
+                if isinstance(p, jax.tree_util.DictKey)]
+        if keys[-len(keypath):] == list(keypath):
+            return param_spec(path, leaf, mesh), leaf
+    raise KeyError(keypath)
+
+
+def test_param_specs_follow_rules(mesh):
+    cfg = get_config("granite-20b")
+    params = abstract_params(cfg)
+    spec, leaf = _spec_of(params, ["embed"], mesh)
+    assert spec == P("model", "data")  # vocab 49152 % 1 == 0 trivially
+    spec, leaf = _spec_of(params, ["attn", "wq"], mesh)
+    # period-stacked [n_periods, d, H*hd]: leading None + rules
+    assert spec == P(None, "data", "model")
+    spec, leaf = _spec_of(params, ["mlp", "wo"], mesh)
+    assert spec == P(None, "model", "data")
+    spec, _ = _spec_of(params, ["final_ln"], mesh)
+    assert spec == P(None)
+
+
+def test_param_specs_drop_non_divisible_axes():
+    mesh16 = jax.make_mesh((1, 1), ("data", "model"),
+                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # simulate the 16x16 divisibility rule with a fake mesh via _fit
+    from repro.sharding.specs import _fit
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+
+    fm = FakeMesh()
+    assert _fit(51865, ("model",), fm) is None  # whisper vocab (odd)
+    assert _fit(202048, ("model",), fm) == "model"
+    assert _fit(8, ("model",), fm) is None  # kv=8 heads < 16 shards
+    del mesh16
+
+
+def test_cache_specs(mesh):
+    cfg = get_config("gemma3-4b")
+    shape = SHAPES["decode_32k"]
+    cache = abstract_cache(cfg, shape)
+    flat, _ = jax.tree_util.tree_flatten_with_path(cache)
+    seen = set()
+    for path, leaf in flat:
+        keys = [p.key for p in path if isinstance(p, jax.tree_util.DictKey)]
+        spec = cache_spec(path, leaf, mesh, cfg, shape)
+        if keys and keys[-1] in ("k", "v"):
+            assert spec[-2:] == (None, None)  # heads/hd unsharded
+            seen.add("kv")
+        if keys and keys[-1] == "pos":
+            assert spec == P()
+            seen.add("pos")
+    assert {"kv", "pos"} <= seen
+
+
+def test_logical_dedup():
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    shard_ctx.set_mesh(mesh, {"seq": "model", "heads": "model",
+                              "batch": ("data",)})
+    try:
+        spec = shard_ctx.logical_to_spec(("batch", "seq", "heads", None))
+        assert spec == P(("data",), "model", None, None)
+    finally:
+        shard_ctx.clear_mesh()
+
+
+def test_shard_hint_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    y = shard_ctx.shard_hint(x, "batch", "embed")
+    assert y is x

@@ -1,0 +1,106 @@
+"""SSD (mamba2) and RG-LRU recurrence correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.mamba2_2_7b import SMOKE_CONFIG as MAMBA_CFG
+from repro.configs.recurrentgemma_2b import SMOKE_CONFIG as RG_CFG
+from repro.models.rglru import (init_rglru, init_rglru_cache,
+                                rglru_decode_step, rglru_forward)
+from repro.models.ssm import (init_ssm, init_ssm_cache, ssd_chunked,
+                              ssm_decode_step, ssm_forward)
+
+
+def _naive_ssd(xh, dt, a_log, bm, cm):
+    b, s, h, p = xh.shape
+    a = -np.exp(np.asarray(a_log))
+    st_ = np.zeros((b, h, p, bm.shape[-1]), np.float64)
+    ys = np.zeros((b, s, h, p))
+    for t in range(s):
+        da = np.exp(np.asarray(dt[:, t]) * a)
+        st_ = st_ * da[..., None, None] + np.einsum(
+            "bh,bhp,bn->bhpn", np.asarray(dt[:, t]), np.asarray(xh[:, t]),
+            np.asarray(bm[:, t]))
+        ys[:, t] = np.einsum("bhpn,bn->bhp", st_, np.asarray(cm[:, t]))
+    return ys, st_
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 64])
+def test_ssd_chunked_vs_sequential(rng, chunk):
+    B, S, H, P, N = 2, 64, 4, 16, 16
+    xh = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (B, S, H)).astype(np.float32))
+    a_log = jnp.asarray(np.log(rng.uniform(1, 8, H)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    y_ref, st_ref = _naive_ssd(xh, dt, a_log, bm, cm)
+    y, st_ = ssd_chunked(xh, dt, a_log, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st_), st_ref, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([16, 32, 48]), chunk=st.sampled_from([8, 16]),
+       seed=st.integers(0, 2**31 - 1))
+def test_ssd_chunked_property(s, chunk, seed):
+    rng = np.random.default_rng(seed)
+    B, H, P, N = 1, 2, 8, 8
+    xh = jnp.asarray(rng.normal(size=(B, s, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.001, 0.2, (B, s, H)).astype(np.float32))
+    a_log = jnp.asarray(np.log(rng.uniform(1, 8, H)).astype(np.float32))
+    bm = jnp.asarray(rng.normal(size=(B, s, N)).astype(np.float32))
+    cm = jnp.asarray(rng.normal(size=(B, s, N)).astype(np.float32))
+    y_ref, _ = _naive_ssd(xh, dt, a_log, bm, cm)
+    y, _ = ssd_chunked(xh, dt, a_log, bm, cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=2e-4, atol=2e-4)
+
+
+def test_ssm_block_decode_equivalence(rng):
+    cfg = MAMBA_CFG
+    p = init_ssm(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 32
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    out, final = ssm_forward(p, x, cfg, return_state=True)
+    cache = init_ssm_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = ssm_decode_step(p, x[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(out), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(cache["state"]),
+                               np.asarray(final["state"]), rtol=5e-4,
+                               atol=5e-4)
+
+
+def test_rglru_decode_and_continuation(rng):
+    cfg = RG_CFG
+    p = init_rglru(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    x = jnp.asarray(rng.normal(size=(B, S, cfg.d_model)).astype(np.float32))
+    y, st_ = rglru_forward(p, x, cfg, return_state=True)
+    cache = init_rglru_cache(cfg, B, jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = rglru_decode_step(p, x[:, t:t + 1], cache, cfg)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(y), rtol=2e-4, atol=2e-4)
+    y1, s1 = rglru_forward(p, x[:, :8], cfg, return_state=True)
+    y2 = rglru_forward(p, x[:, 8:], cfg, h0=s1["h"], conv_tail=s1["conv"])
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([y1, y2], 1)), np.asarray(y),
+        rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_decay_bounded(rng):
+    """Property: the gated decay a_t stays in (0, 1] — stability."""
+    cfg = RG_CFG
+    p = init_rglru(jax.random.PRNGKey(0), cfg)
+    from repro.models.rglru import _gates
+    u = jnp.asarray(rng.normal(size=(2, 8, cfg.lru_width)) * 10,
+                    jnp.float32)
+    a, _ = _gates(p, u)
+    assert float(a.min()) > 0.0 and float(a.max()) <= 1.0

@@ -1,0 +1,120 @@
+"""Training substrate: optimizer, schedule, compression, loss descent."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataConfig, lm_data_iter, make_lm_batch
+from repro.train.grad_compress import (compress_int8, compress_topk_ef,
+                                       init_residual, int8_roundtrip)
+from repro.train.loop import TrainConfig, init_train_state, make_train_step
+from repro.train.optimizer import (OptConfig, adamw_update,
+                                   clip_by_global_norm, global_norm,
+                                   init_opt_state, schedule)
+
+
+def test_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                    min_lr_frac=0.1)
+    s = lambda t: float(schedule(jnp.asarray(t), cfg))  # noqa: E731
+    assert s(0) == 0.0
+    assert abs(s(10) - 1.0) < 1e-6
+    assert s(50) < 1.0
+    assert abs(s(100) - 0.1) < 1e-6
+    assert s(100) <= s(60) <= s(20)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(norm) - 10.0) < 1e-5
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-5
+
+
+def test_adamw_moves_towards_minimum():
+    params = {"w": jnp.asarray([5.0, -3.0])}
+    state = init_opt_state(params)
+    cfg = OptConfig(lr=0.5, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0, clip_norm=1e9)
+    for _ in range(200):
+        grads = {"w": params["w"]}  # d/dw (w^2/2)
+        params, state, _ = adamw_update(params, grads, state, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_int8_roundtrip_error_bounded(rng):
+    g = jnp.asarray(rng.normal(size=(256,)).astype(np.float32))
+    out = int8_roundtrip(g)
+    scale = float(jnp.abs(g).max()) / 127.0
+    assert float(jnp.abs(out - g).max()) <= scale * 0.5 + 1e-7
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.floats(0.01, 0.5))
+def test_topk_error_feedback_conserves_mass(seed, k):
+    """sent + residual == grad + old residual (nothing lost)."""
+    rng = np.random.default_rng(seed)
+    g = {"w": jnp.asarray(rng.normal(size=(64,)).astype(np.float32))}
+    res = init_residual(g)
+    sent, new_res = compress_topk_ef(g, res, k_frac=k)
+    np.testing.assert_allclose(
+        np.asarray(sent["w"] + new_res["w"]), np.asarray(g["w"]),
+        rtol=1e-6, atol=1e-6)
+    # sparsity: at most ceil(k*64)+ties entries sent
+    nz = int((np.asarray(sent["w"]) != 0).sum())
+    assert nz <= 64
+
+
+def test_loss_decreases_on_structured_stream(rng):
+    cfg = dataclasses.replace(get_smoke_config("granite-20b"),
+                              dtype="float32")
+    shape = ShapeConfig("tiny", 64, 8, "train")
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=5,
+                                     total_steps=50))
+    params = jax.jit(lambda k: __import__(
+        "repro.models.transformer", fromlist=["init_lm"]).init_lm(k, cfg))(
+        jax.random.PRNGKey(0))
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(cfg, tcfg))
+    it = lm_data_iter(cfg, shape, DataConfig(seed=3))
+    losses = []
+    for i in range(30):
+        params, state, m = step(params, state, next(it))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.3, losses[:3] + losses[-3:]
+
+
+def test_microbatching_matches_full_batch(rng):
+    """Grad accumulation over microbatches == one big batch (linear loss)."""
+    cfg = dataclasses.replace(get_smoke_config("nemotron-4-15b"),
+                              dtype="float32")
+    from repro.models.transformer import init_lm
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    batch = make_lm_batch(cfg, 32, 8, 0, DataConfig(seed=0))
+    t1 = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0, total_steps=10),
+                     microbatches=1)
+    t2 = dataclasses.replace(t1, microbatches=4)
+    s1 = init_train_state(params, t1)
+    s2 = init_train_state(params, t2)
+    p1, _, m1 = jax.jit(make_train_step(cfg, t1))(params, s1, batch)
+    p2, _, m2 = jax.jit(make_train_step(cfg, t2))(params, s2, batch)
+    assert abs(float(m1["loss"]) - float(m2["loss"])) < 2e-3
+    diff = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
+    assert max(jax.tree_util.tree_leaves(diff)) < 5e-3
+
+
+def test_deterministic_data_pipeline():
+    cfg = get_smoke_config("granite-20b")
+    b1 = make_lm_batch(cfg, 32, 8, step=7, dcfg=DataConfig(seed=5))
+    b2 = make_lm_batch(cfg, 32, 8, step=7, dcfg=DataConfig(seed=5))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = make_lm_batch(cfg, 32, 8, step=8, dcfg=DataConfig(seed=5))
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
