@@ -1,0 +1,133 @@
+"""The paper's crossover curve: SpMM path choice vs sparsity.
+
+Sweeps sparsity from 0.5 to 0.999 and, per point, reports
+
+  * the analytic cost model's numbers and chosen path,
+  * measured wall-times of every path on this CPU,
+  * the measured winner (the empirical crossover),
+
+as a JSON document with per-point chosen-path labels — the executable
+form of the paper's Fig. 9 observation that the Block-ELL/SELLPACK-style
+streaming design wins at moderate sparsity and degrades past ~99% until
+the scalar CSR path is faster.
+
+Usage:
+  PYTHONPATH=src:. python -m benchmarks.bench_crossover --sweep
+  ... --policy {auto,autotune,ell,csr,dense}  (dispatch policy to label)
+  ... --out crossover.json                    (default: stdout)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.dispatch import SparseOperand, last_plan
+from repro.dispatch.dispatcher import dispatch_spmm
+from repro.dispatch.policy import PATHS
+
+SPARSITIES = [0.5, 0.75, 0.9, 0.95, 0.99, 0.995, 0.999]
+# Small blocks keep the block-granular layout honest under *uniform*
+# element sparsity (the paper's synthetic workload): with big blocks
+# every block is nonzero long past the crossover and the curve is flat.
+BLOCK = 4
+
+
+def sweep(n: int = 1024, d: int = 64, *, policy: str = "auto",
+          seed: int = 0, quick: bool = False) -> dict:
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    points = []
+    for s in SPARSITIES:
+        mask = rng.random((n, n)) < (1.0 - s)
+        dense = np.where(mask, rng.normal(size=(n, n)), 0.0) \
+            .astype(np.float32)
+        op = SparseOperand.from_dense(dense, block_m=BLOCK, block_n=BLOCK)
+        stats = op.stats()
+
+        # dispatch under the requested policy (records the plan)
+        dispatch_spmm(op, h, policy=policy)
+        plan = last_plan("spmm")
+
+        # measure every path's jitted steady-state (what a consumer that
+        # bakes the plan into its jitted forward actually pays)
+        import jax
+
+        from repro.core.spmm import spmm_csr, spmm_dense
+        from repro.kernels.spmm.ref import spmm_blockell_ref
+
+        row_ids, col_ids, values = op.csr_arrays()
+        iters = 3 if quick else 5
+        times = {
+            "ell": time_fn(jax.jit(spmm_blockell_ref), op.ell(), h,
+                           warmup=2, iters=iters),
+            "csr": time_fn(
+                jax.jit(lambda r, c, v, hh: spmm_csr(r, c, v, hh, n)),
+                row_ids, col_ids, values, h, warmup=2, iters=iters),
+            "dense": time_fn(jax.jit(spmm_dense), op.dense_jnp(), h,
+                             warmup=2, iters=iters),
+        }
+        measured = min(times, key=times.get)
+
+        points.append({
+            "sparsity": s,
+            "density": stats.density,
+            "nnz": stats.nnz,
+            "occupancy": stats.occupancy,
+            "padded_stream_blowup": stats.padded_stream_blowup,
+            "chosen": plan.path,
+            "policy": plan.policy,
+            "costs": plan.costs,
+            "times_us": times,
+            "measured_winner": measured,
+        })
+    return {
+        "op": "spmm",
+        "n": n,
+        "d": d,
+        "block": BLOCK,
+        "policy": policy,
+        "points": points,
+    }
+
+
+def run(quick: bool = True, policy: str = "auto"):
+    """benchmarks.run entry: print the curve as name,us,derived rows."""
+    result = sweep(n=512 if quick else 1024, d=64, policy=policy,
+                   quick=quick)
+    for pt in result["points"]:
+        for path, us in pt["times_us"].items():
+            mark = "*" if path == pt["chosen"] else ""
+            print(f"crossover_s{pt['sparsity']:g}_{path}{mark},{us:.1f},"
+                  f"chosen={pt['chosen']};winner={pt['measured_winner']}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sweep", action="store_true",
+                    help="emit the JSON crossover curve")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "autotune", "ell", "csr", "dense"])
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON output path")
+    args = ap.parse_args()
+
+    result = sweep(n=args.n, d=args.d, policy=args.policy, quick=args.quick)
+    doc = json.dumps(result, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(doc + "\n")
+        labels = [(p["sparsity"], p["chosen"]) for p in result["points"]]
+        print(f"wrote {args.out}; chosen paths: {labels}", file=sys.stderr)
+    else:
+        print(doc)
+
+
+if __name__ == "__main__":
+    main()

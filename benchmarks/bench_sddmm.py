@@ -20,7 +20,10 @@ from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 D = 2  # paper §4.4: GAT attention-score dimension
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, policy: str = "auto"):
+    from repro.dispatch import last_plan
+    from repro.dispatch.dispatcher import dispatch_sddmm
+
     ns = [2048, 4096] if quick else [2048, 4096, 8192]
     densities = [1e-3, 1e-2, 1e-1]
     for n in ns:
@@ -43,6 +46,15 @@ def run(quick: bool = True):
             emit(f"sddmm_n{n}_d{density:g}_coo_cpu", t_coo,
                  f"speedup_vs_dense={t_cpu / t_coo:.2f}")
 
+            # the dispatch layer's pick under the requested policy
+            coo_a = BlockCOO.from_dense(mask.astype(np.float32), 64, 64)
+            t_disp = time_fn(
+                lambda: dispatch_sddmm(coo_a, jb, jc, policy=policy).blocks,
+                warmup=1, iters=5)
+            plan = last_plan("sddmm")
+            emit(f"sddmm_n{n}_d{density:g}_dispatch_{policy}", t_disp,
+                 f"chosen={plan.path};policy={plan.policy}")
+
             # mnz sensitivity: Block-COO tile padding overhead (paper: a
             # larger mnz means more device->host bytes for the same work)
             nnz = len(rows)
@@ -62,4 +74,11 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run(quick=False)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "autotune", "ell", "csr", "dense"])
+    args = ap.parse_args()
+    run(quick=args.quick, policy=args.policy)

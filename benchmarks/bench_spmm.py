@@ -41,7 +41,10 @@ def tpu_projection(ell: BlockELL, d: int) -> float:
     return max(flops / PEAK_FLOPS, bytes_ / HBM_BW)
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, policy: str = "auto"):
+    from repro.dispatch import SparseOperand, last_plan
+    from repro.dispatch.dispatcher import dispatch_spmm
+
     ns = [2048, 4096] if quick else [2048, 4096, 8192, 16384]
     densities = [1e-3, 1e-2, 1e-1]
     for n in ns:
@@ -69,6 +72,22 @@ def run(quick: bool = True):
                  proj * 1e6,
                  f"projected_speedup_vs_cpu_csr={t_csr / (proj * 1e6):.1f}")
 
+            # the dispatch layer's pick under the requested policy
+            op = SparseOperand.from_dense(dense, block_m=64, block_n=64)
+            t_disp = time_fn(
+                lambda: dispatch_spmm(op, jh, policy=policy),
+                warmup=1, iters=5)
+            plan = last_plan("spmm")
+            emit(f"spmm_n{n}_d{density:g}_dispatch_{policy}", t_disp,
+                 f"chosen={plan.path};policy={plan.policy}")
+
 
 if __name__ == "__main__":
-    run(quick=False)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "autotune", "ell", "csr", "dense"])
+    args = ap.parse_args()
+    run(quick=args.quick, policy=args.policy)

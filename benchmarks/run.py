@@ -6,9 +6,12 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_footprint    — Fig. 8 (SELLPACK-like vs CSR footprint)
   bench_spmm         — Fig. 9 (SpMM vs density/N, d=256)
   bench_sddmm        — Fig. 10 (SDDMM vs density, d=2, mnz sensitivity)
+  bench_crossover    — Fig. 9's crossover as a dispatch-path sweep
 
-``python -m benchmarks.run [--full]`` (quick mode by default so the CPU
-container finishes in minutes; --full matches the paper's largest sizes).
+``python -m benchmarks.run [--full] [--policy auto]`` (quick mode by
+default so the CPU container finishes in minutes; --full matches the
+paper's largest sizes; --policy sets the dispatch policy for the
+benches that route through the dispatch layer).
 """
 import argparse
 import sys
@@ -19,24 +22,31 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "autotune", "ell", "csr", "dense"])
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_dense_limit, bench_footprint, bench_sddmm,
-                            bench_spmm)
+    from benchmarks import (bench_crossover, bench_dense_limit,
+                            bench_footprint, bench_sddmm, bench_spmm)
     benches = {
         "dense_limit": bench_dense_limit.run,
         "footprint": bench_footprint.run,
         "spmm": bench_spmm.run,
         "sddmm": bench_sddmm.run,
+        "crossover": bench_crossover.run,
     }
+    dispatched = {"spmm", "sddmm", "crossover"}
     only = set(args.only.split(",")) if args.only else None
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        fn(quick=quick)
+        if name in dispatched:
+            fn(quick=quick, policy=args.policy)
+        else:
+            fn(quick=quick)
 
 
 if __name__ == "__main__":

@@ -58,9 +58,8 @@ def main():
     n_dev = len(jax.devices())
     if n_dev >= 4:
         from repro.core.distributed import spmm_1p5d
-        mesh = jax.make_mesh(
-            (2, n_dev // 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.sharding.specs import make_mesh
+        mesh = make_mesh((2, n_dev // 2), ("data", "model"))
         y_d = spmm_1p5d(ell, jnp.asarray(h), mesh)
         print(f"1.5D max|err| = "
               f"{np.abs(np.asarray(y_d) - a_dense @ h).max():.2e}")

@@ -1,16 +1,22 @@
-"""Public SDDMM API:  Y = A ⊙ (B @ C)  computed only at A's nonzeros."""
+"""Public SDDMM API:  Y = A ⊙ (B @ C)  computed only at A's nonzeros.
+
+``sddmm`` routes through the sparsity-adaptive dispatch layer
+(repro.dispatch): the blocked Block-COO path, the element-COO scalar
+path, or the dense-sample fallback, per the chosen policy.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.formats import BlockCOO
-from repro.kernels.sddmm.ops import sddmm_blockcoo as _sddmm_kernelpath
 
 
-def sddmm(a: BlockCOO, b, c, **kw) -> BlockCOO:
-    """Block-granular SDDMM (kernel or reference path)."""
-    return _sddmm_kernelpath(a, b, c, **kw)
+def sddmm(a, b, c, *, policy: str = "auto", **kw) -> BlockCOO:
+    """SDDMM for sparse-mask A (BlockCOO or dense); returns BlockCOO."""
+    from repro.dispatch.dispatcher import dispatch_sddmm
+
+    return dispatch_sddmm(a, b, c, policy=policy, **kw)
 
 
 def sddmm_coo(row_ids, col_ids, b, c):

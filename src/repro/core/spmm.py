@@ -7,6 +7,13 @@ Three execution paths, mirroring the paper's design space:
   * Element-level CSR segment-sum — the general scalar path (and the analog
     of the paper's initial CSR-streaming design); exact for any sparsity
     pattern without blocking/padding overhead, but does not use the MXU.
+
+``spmm`` routes between them through the sparsity-adaptive dispatch
+layer (repro.dispatch): policy "auto" applies the cost model over the
+operand's measured sparsity structure, "autotune" times the candidates
+once per (shape, dtype, sparsity-bucket), and "ell"/"csr"/"dense" force
+a path.  The low-level per-path entry points below remain public for
+callers that have already planned.
 """
 from __future__ import annotations
 
@@ -15,12 +22,17 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import CSR, BlockELL
-from repro.kernels.spmm.ops import spmm_blockell as _spmm_blockell_kernelpath
 
 
-def spmm(a: BlockELL, h, **kw):
-    """Y = A @ H for Block-ELL A (dispatches kernel vs reference)."""
-    return _spmm_blockell_kernelpath(a, h, **kw)
+def spmm(a, h, *, policy: str = "auto", **kw):
+    """Y = A @ H for sparse A (BlockELL, SparseOperand, or dense).
+
+    Dispatches to the Block-ELL kernel/reference, the CSR element path,
+    or the dense fallback based on ``policy`` — see repro.dispatch.
+    """
+    from repro.dispatch.dispatcher import dispatch_spmm
+
+    return dispatch_spmm(a, h, policy=policy, **kw)
 
 
 # ---------------------------------------------------------------------------

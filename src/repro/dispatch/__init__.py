@@ -1,0 +1,28 @@
+"""Sparsity-adaptive SpMM/SDDMM dispatch (the paper's crossover, live).
+
+See DESIGN.md for the policy, cost-model inputs, and autotune cache key.
+"""
+from repro.dispatch.autotune import (AutotuneCache, GLOBAL_CACHE, make_key,
+                                     measure)
+from repro.dispatch.cost_model import CostModel, DEFAULT_COST_MODEL
+from repro.dispatch.dispatcher import (Plan, clear_log, dispatch_log,
+                                       dispatch_sddmm, dispatch_spmm,
+                                       last_plan, plan_sddmm, plan_spmm)
+from repro.dispatch.operand import SparseOperand
+from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
+                                   PATH_CSR, PATH_DENSE, PATH_ELL, POLICIES,
+                                   POLICY_AUTO, POLICY_AUTOTUNE,
+                                   normalize_policy)
+from repro.dispatch.stats import MatrixStats, sparsity_bucket
+
+__all__ = [
+    "AutotuneCache", "GLOBAL_CACHE", "make_key", "measure",
+    "CostModel", "DEFAULT_COST_MODEL",
+    "Plan", "clear_log", "dispatch_log", "dispatch_sddmm", "dispatch_spmm",
+    "last_plan", "plan_sddmm", "plan_spmm",
+    "SparseOperand",
+    "DEFAULT_CONFIG", "DispatchConfig", "PATHS", "PATH_CSR", "PATH_DENSE",
+    "PATH_ELL", "POLICIES", "POLICY_AUTO", "POLICY_AUTOTUNE",
+    "normalize_policy",
+    "MatrixStats", "sparsity_bucket",
+]

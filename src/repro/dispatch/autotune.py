@@ -1,0 +1,136 @@
+"""Empirical autotune pass: time candidate paths, cache the winner.
+
+The cache key deliberately buckets sparsity (log-density buckets) so one
+measurement serves a whole sparsity regime: dispatching a 90%-sparse and
+a 91%-sparse operand of the same shape/dtype should not trigger two
+timing passes.  Keys are plain tuples so the cache can be serialized to
+JSON for reuse across processes (the CS-3 analog: the host compiles one
+routing table per workload family, not per matrix).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import threading
+import time
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+
+from repro.dispatch.stats import sparsity_bucket
+
+AutotuneKey = Tuple  # (op, m, n, inner_dim, dtype_str, sparsity_bucket)
+
+
+def make_key(op: str, shape: Tuple[int, int], inner_dim: int, dtype,
+             density: float, *, buckets_per_decade: int = 2) -> AutotuneKey:
+    return (
+        str(op),
+        int(shape[0]),
+        int(shape[1]),
+        int(inner_dim),
+        str(dtype),
+        sparsity_bucket(density, buckets_per_decade),
+    )
+
+
+@dataclasses.dataclass
+class Measurement:
+    path: str
+    timings_us: Dict[str, float]
+
+
+class AutotuneCache:
+    """Thread-safe (key -> winning path) cache with JSON persistence."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: Dict[AutotuneKey, Measurement] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def get(self, key: AutotuneKey) -> Optional[Measurement]:
+        with self._lock:
+            m = self._entries.get(key)
+            if m is None:
+                self.misses += 1
+            else:
+                self.hits += 1
+            return m
+
+    def put(self, key: AutotuneKey, m: Measurement) -> None:
+        with self._lock:
+            self._entries[key] = m
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = 0
+            self.misses = 0
+
+    # -- persistence --------------------------------------------------------
+
+    def to_json(self) -> str:
+        with self._lock:
+            payload = [
+                {"key": list(k), "path": m.path, "timings_us": m.timings_us}
+                for k, m in self._entries.items()
+            ]
+        return json.dumps(payload, indent=2, sort_keys=True)
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            payload = json.load(f)
+        with self._lock:
+            for row in payload:
+                self._entries[tuple(row["key"])] = Measurement(
+                    path=row["path"], timings_us=row["timings_us"])
+
+
+def _time_us(fn: Callable[[], object], warmup: int, iters: int) -> float:
+    out = None
+    for _ in range(max(warmup, 0)):
+        out = fn()
+    if out is not None:
+        jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(max(iters, 1)):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def measure(candidates: Dict[str, Callable[[], object]], *,
+            warmup: int = 1, iters: int = 3) -> Measurement:
+    """Time each candidate thunk; return the winner + all timings.
+
+    Candidates that raise are recorded as +inf (a path can legitimately
+    be unavailable, e.g. the Pallas kernel on an unsupported shape).
+    """
+    timings: Dict[str, float] = {}
+    last_exc: Optional[Exception] = None
+    for name, thunk in candidates.items():
+        try:
+            timings[name] = _time_us(thunk, warmup, iters)
+        except Exception as exc:  # noqa: BLE001 - unavailable path, not fatal
+            timings[name] = float("inf")
+            last_exc = exc
+    finite = {p: t for p, t in timings.items() if t != float("inf")}
+    if not finite:
+        raise RuntimeError(
+            "autotune: every candidate path failed") from last_exc
+    best = min(finite, key=finite.get)
+    return Measurement(path=best, timings_us=timings)
+
+
+# Process-global cache used by the dispatcher's `autotune` policy.
+GLOBAL_CACHE = AutotuneCache()

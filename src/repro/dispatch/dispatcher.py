@@ -1,0 +1,476 @@
+"""Sparsity-adaptive dispatch for SpMM and SDDMM.
+
+Every public sparse matmul in the repo routes through here.  A call is
+resolved in three steps:
+
+  1. **Stats** — host-side structure statistics of the sparse operand
+     (density, stored/padded stream volume, ELL occupancy).
+  2. **Plan** — a ``Plan`` naming the execution path, chosen by (a) an
+     explicit policy ("ell" / "csr" / "dense"), (b) the analytic cost
+     model ("auto"), or (c) a timed autotune pass with a per-(shape,
+     dtype, sparsity-bucket) cache ("autotune").
+  3. **Execute** — run the chosen path.  The blocked path further
+     resolves kernel-vs-reference: the Pallas kernel on TPU backends (or
+     when explicitly requested / interpreted), the jnp reference
+     elsewhere.
+
+Plans are host decisions: under ``jax.jit`` the operand's arrays are
+tracers, so callers either dispatch outside jit (the serving engine
+does) or plan once from static ``MatrixStats`` carried in pytree aux
+metadata (the GNN layer does).  A traced operand with policy "auto"
+falls back to the blocked path — the only one that needs no host
+conversion — and records the fallback in the plan's reason.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BlockCOO, BlockELL
+from repro.dispatch import autotune as autotune_mod
+from repro.dispatch.autotune import AutotuneCache, make_key, measure
+from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
+from repro.dispatch.operand import SparseOperand
+from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATH_CSR,
+                                   PATH_DENSE, PATH_ELL, POLICY_AUTO,
+                                   POLICY_AUTOTUNE, normalize_policy)
+from repro.dispatch.stats import MatrixStats
+
+Array = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """One resolved dispatch decision (also the reporting record)."""
+
+    op: str                      # "spmm" | "sddmm"
+    path: str                    # ell | csr | dense
+    policy: str                  # policy that produced this plan
+    reason: str                  # human-readable why
+    use_kernel: bool             # ell path only: Pallas kernel vs jnp ref
+    interpret: bool
+    costs: Optional[Dict[str, float]] = None       # analytic model output
+    timings_us: Optional[Dict[str, float]] = None  # autotune output
+    stats: Optional[MatrixStats] = None
+
+    def describe(self) -> str:
+        extra = ""
+        if self.stats is not None:
+            extra = (f" density={self.stats.density:.2e}"
+                     f" blowup={self.stats.padded_stream_blowup:.1f}")
+        return f"{self.op}->{self.path} [{self.policy}: {self.reason}]{extra}"
+
+
+# Bounded record of recent decisions, for benchmarks / engines to report.
+_LOG: "collections.deque[Plan]" = collections.deque(maxlen=256)
+
+
+def dispatch_log() -> Tuple[Plan, ...]:
+    return tuple(_LOG)
+
+
+def last_plan(op: Optional[str] = None) -> Optional[Plan]:
+    for plan in reversed(_LOG):
+        if op is None or plan.op == op:
+            return plan
+    return None
+
+
+def clear_log() -> None:
+    _LOG.clear()
+
+
+def _record(plan: Plan) -> Plan:
+    _LOG.append(plan)
+    return plan
+
+
+def record_plan(plan: Plan) -> Plan:
+    """Append an externally-made plan to the dispatch log (reporting)."""
+    return _record(plan)
+
+
+def _is_traced(*arrays) -> bool:
+    return any(isinstance(a, jax.core.Tracer) for a in arrays)
+
+
+def _default_use_kernel(config: DispatchConfig) -> bool:
+    if config.use_kernel is not None:
+        return config.use_kernel
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Planning (pure decision; usable at trace time from static stats)
+# ---------------------------------------------------------------------------
+
+
+def plan_spmm(
+    stats: MatrixStats,
+    d: int,
+    *,
+    policy: str = POLICY_AUTO,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    candidates: Optional[Tuple[str, ...]] = None,
+) -> Plan:
+    """Pure planning from static stats (safe at jit trace time).
+
+    ``candidates`` restricts the choice to the paths the caller can
+    actually execute (e.g. a Graph carries only the ell + csr forms).
+    """
+    return _plan("spmm", cost_model.spmm_costs(stats, d), stats,
+                 policy=policy, config=config, use_kernel=use_kernel,
+                 interpret=interpret, candidates=candidates)
+
+
+def plan_sddmm(
+    stats: MatrixStats,
+    k: int,
+    *,
+    policy: str = POLICY_AUTO,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    candidates: Optional[Tuple[str, ...]] = None,
+) -> Plan:
+    return _plan("sddmm", cost_model.sddmm_costs(stats, k), stats,
+                 policy=policy, config=config, use_kernel=use_kernel,
+                 interpret=interpret, candidates=candidates)
+
+
+def _plan(op, costs, stats, *, policy, config, use_kernel, interpret,
+          candidates=None) -> Plan:
+    policy = normalize_policy(policy)
+    if policy == POLICY_AUTOTUNE:
+        # pure planning cannot time candidates; be honest about what ran
+        policy = POLICY_AUTO
+    if candidates:
+        costs = {p: c for p, c in costs.items() if p in candidates}
+    uk = use_kernel if use_kernel is not None \
+        else _default_use_kernel(config)
+    if policy in (PATH_ELL, PATH_CSR, PATH_DENSE):
+        if candidates and policy not in candidates:
+            raise ValueError(
+                f"policy {policy!r} not among available paths {candidates}")
+        return Plan(op=op, path=policy, policy=policy, reason="forced",
+                    use_kernel=uk, interpret=interpret, costs=costs,
+                    stats=stats)
+    path = CostModel.pick(costs)
+    reason = (f"cost model: {path} cheapest of "
+              + ", ".join(f"{p}={c:.3g}" for p, c in sorted(costs.items())))
+    return Plan(op=op, path=path, policy=policy, reason=reason,
+                use_kernel=uk, interpret=interpret, costs=costs, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# SpMM dispatch
+# ---------------------------------------------------------------------------
+
+
+def _as_spmm_operand(a) -> Tuple[Optional[SparseOperand], Optional[BlockELL]]:
+    """Returns (operand, raw_ell).  operand is None for traced input."""
+    if isinstance(a, SparseOperand):
+        return a, None
+    if isinstance(a, BlockELL):
+        if _is_traced(a.blocks, a.indices):
+            return None, a
+        return SparseOperand.from_blockell(a), None
+    arr = np.asarray(a) if not _is_traced(a) else None
+    if arr is None:
+        raise TypeError(
+            "dispatch_spmm: traced dense operand; pass a BlockELL (blocked "
+            "fallback) or plan outside jit with plan_spmm + static stats")
+    return SparseOperand.from_dense(arr), None
+
+
+def _run_spmm_path(path: str, op: SparseOperand, h, *, use_kernel: bool,
+                   interpret: bool, bd=None, out_dtype=None):
+    from repro.core.spmm import spmm_csr, spmm_dense
+    from repro.kernels.spmm.ops import spmm_blockell
+
+    m = op.shape[0]
+    if h.shape[0] != op.shape[1]:
+        raise ValueError(
+            f"spmm: H has {h.shape[0]} rows but A has {op.shape[1]} "
+            f"columns (A shape {op.shape})")
+    if path == PATH_ELL:
+        ell = op.ell()
+        n_pad = ell.shape[1]
+        hh = h
+        if h.shape[0] != n_pad:  # operand narrower than its block padding
+            hh = jnp.zeros((n_pad,) + h.shape[1:], h.dtype) \
+                .at[: h.shape[0]].set(h)
+        y = spmm_blockell(ell, hh, bd=bd, out_dtype=out_dtype,
+                          use_kernel=use_kernel or interpret,
+                          interpret=interpret)
+        return y[:m]
+    if path == PATH_CSR:
+        row_ids, col_ids, values = op.csr_arrays()
+        y = spmm_csr(row_ids, col_ids, values, h[: op.shape[1]], m)
+        return y.astype(out_dtype) if out_dtype else y
+    if path == PATH_DENSE:
+        y = spmm_dense(op.dense_jnp(), h[: op.shape[1]])
+        return y.astype(out_dtype) if out_dtype else y
+    raise ValueError(f"unknown spmm path {path!r}")
+
+
+def dispatch_spmm(
+    a,
+    h,
+    *,
+    policy: str = POLICY_AUTO,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    bd: Optional[int] = None,
+    out_dtype=None,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    cache: Optional[AutotuneCache] = None,
+):
+    """Y = A @ H through the sparsity-adaptive dispatch layer.
+
+    ``a``: BlockELL, SparseOperand, or a concrete dense matrix.
+    Explicit ``use_kernel``/``interpret`` force the blocked path (they
+    parameterize it, so requesting them implies it) — this keeps the
+    legacy ``spmm(ell, h, use_kernel=False)`` call sites meaningful.
+    """
+    kernel_forced = use_kernel is not None or interpret is not None
+    interpret = bool(interpret)
+    h_was_1d = h.ndim == 1
+    if h_was_1d:
+        h = h[:, None]
+    operand, raw_ell = _as_spmm_operand(a)
+
+    policy = normalize_policy(policy)
+    if kernel_forced and policy in (POLICY_AUTO, POLICY_AUTOTUNE):
+        policy = PATH_ELL
+
+    if operand is None:  # traced BlockELL: blocked path is the only option
+        from repro.kernels.spmm.ops import spmm_blockell
+
+        if policy in (PATH_CSR, PATH_DENSE):
+            raise TypeError(
+                f"dispatch_spmm: policy {policy!r} needs host-visible "
+                "operand data, but the BlockELL is traced (inside jit); "
+                "dispatch outside jit or use the ell path")
+        uk = use_kernel if use_kernel is not None \
+            else _default_use_kernel(config)
+        _record(Plan(op="spmm", path=PATH_ELL, policy=policy,
+                     reason="traced operand: blocked path only",
+                     use_kernel=uk, interpret=interpret))
+        return spmm_blockell(raw_ell, h, bd=bd, out_dtype=out_dtype,
+                             use_kernel=uk or interpret,
+                             interpret=interpret)
+
+    d = h.shape[1]
+    if policy in (PATH_ELL, PATH_CSR, PATH_DENSE):
+        # forced path: no stats needed (skips the host nonzero count)
+        uk = use_kernel if use_kernel is not None \
+            else _default_use_kernel(config)
+        plan = Plan(op="spmm", path=policy, policy=policy, reason="forced",
+                    use_kernel=uk, interpret=interpret)
+        _record(plan)
+        y = _run_spmm_path(policy, operand, h, use_kernel=uk,
+                           interpret=interpret, bd=bd, out_dtype=out_dtype)
+        return y[:, 0] if h_was_1d else y
+
+    stats = operand.stats()
+
+    if policy == POLICY_AUTOTUNE:
+        cache = cache if cache is not None else autotune_mod.GLOBAL_CACHE
+        key = make_key("spmm", stats.shape, d, h.dtype, stats.density,
+                       buckets_per_decade=config.buckets_per_decade)
+        uk = use_kernel if use_kernel is not None \
+            else _default_use_kernel(config)
+        hit = cache.get(key)
+        if hit is None:
+            candidates = {
+                p: (lambda p=p: _run_spmm_path(
+                    p, operand, h, use_kernel=uk, interpret=interpret,
+                    bd=bd, out_dtype=out_dtype))
+                for p in (PATH_ELL, PATH_CSR, PATH_DENSE)
+            }
+            hit = measure(candidates, warmup=config.autotune_warmup,
+                          iters=config.autotune_iters)
+            cache.put(key, hit)
+            reason = "autotune: measured " + ", ".join(
+                f"{p}={t:.0f}us" for p, t in sorted(hit.timings_us.items()))
+        else:
+            reason = "autotune: cached winner"
+        plan = Plan(op="spmm", path=hit.path, policy=POLICY_AUTOTUNE,
+                    reason=reason, use_kernel=uk,
+                    interpret=interpret, timings_us=hit.timings_us,
+                    stats=stats)
+    else:
+        plan = plan_spmm(stats, d, policy=policy, cost_model=cost_model,
+                         config=config, use_kernel=use_kernel,
+                         interpret=interpret)
+    _record(plan)
+    y = _run_spmm_path(plan.path, operand, h, use_kernel=plan.use_kernel,
+                       interpret=plan.interpret, bd=bd,
+                       out_dtype=out_dtype)
+    return y[:, 0] if h_was_1d else y
+
+
+# ---------------------------------------------------------------------------
+# SDDMM dispatch
+# ---------------------------------------------------------------------------
+
+
+def _coo_element_coords(coo: BlockCOO):
+    """Host-side element coordinates of a concrete BlockCOO's nonzeros."""
+    blocks = np.asarray(coo.blocks)
+    rows = np.asarray(coo.rows)
+    cols = np.asarray(coo.cols)
+    e, i, j = np.nonzero(blocks)
+    gr = rows[e] * coo.bm + i
+    gc = cols[e] * coo.bn + j
+    return e, i, j, gr.astype(np.int32), gc.astype(np.int32)
+
+
+def _run_sddmm_path(path: str, coo: BlockCOO, b, c, *, use_kernel: bool,
+                    interpret: bool, bk=None, out_dtype=None) -> BlockCOO:
+    from repro.core.sddmm import sddmm_coo
+    from repro.kernels.sddmm.ops import sddmm_blockcoo
+
+    if path == PATH_ELL:
+        return sddmm_blockcoo(coo, b, c, bk=bk, out_dtype=out_dtype,
+                              use_kernel=use_kernel or interpret,
+                              interpret=interpret)
+    out_dtype = out_dtype or jnp.result_type(coo.blocks.dtype, b.dtype)
+    if path == PATH_CSR:
+        e, i, j, gr, gc = _coo_element_coords(coo)
+        dots = sddmm_coo(jnp.asarray(gr), jnp.asarray(gc), b, c)
+        vals = (jnp.asarray(np.asarray(coo.blocks)[e, i, j])
+                .astype(jnp.float32) * dots.astype(jnp.float32))
+        out_blocks = jnp.zeros(coo.blocks.shape, jnp.float32) \
+            .at[e, i, j].set(vals).astype(out_dtype)
+        return BlockCOO(rows=coo.rows, cols=coo.cols, blocks=out_blocks,
+                        shape=coo.shape)
+    if path == PATH_DENSE:
+        m, n = coo.shape
+        bm, bn = coo.bm, coo.bn
+        full = b.astype(jnp.float32) @ c.astype(jnp.float32)  # [M, N]
+        tiles = full.reshape(m // bm, bm, n // bn, bn).transpose(0, 2, 1, 3)
+        gathered = tiles[coo.rows, coo.cols]  # [nnzb, bm, bn]
+        out_blocks = (coo.blocks.astype(jnp.float32)
+                      * gathered).astype(out_dtype)
+        return BlockCOO(rows=coo.rows, cols=coo.cols, blocks=out_blocks,
+                        shape=coo.shape)
+    raise ValueError(f"unknown sddmm path {path!r}")
+
+
+def dispatch_sddmm(
+    a,
+    b,
+    c,
+    *,
+    policy: str = POLICY_AUTO,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    bk: Optional[int] = None,
+    out_dtype=None,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    cache: Optional[AutotuneCache] = None,
+) -> BlockCOO:
+    """Y = A (.) (B @ C) through the dispatch layer; returns BlockCOO.
+
+    ``a``: BlockCOO (mask/values of A) or a concrete dense matrix, which
+    is tiled with 64x64 blocks.  Path vocabulary matches SpMM: "ell" is
+    the blocked (Block-COO) path, "csr" the element-COO path, "dense"
+    the full-product-then-sample fallback.
+    """
+    kernel_forced = use_kernel is not None or interpret is not None
+    interpret = bool(interpret)
+    if not isinstance(a, BlockCOO):
+        if _is_traced(a):
+            raise TypeError("dispatch_sddmm: traced dense operand")
+        a = BlockCOO.from_dense(np.asarray(a), 64, 64)
+
+    # A's BlockCOO shape is block-padded; pad B/C to match so every path
+    # (block reshape, element gather, dense product) sees aligned shapes.
+    # The padded regions of A are zero, so they contribute nothing.
+    mp, np_pad = a.shape
+    if b.shape[0] != mp:
+        if b.shape[0] > mp:
+            raise ValueError(
+                f"sddmm: B has {b.shape[0]} rows but A has {mp}")
+        b = jnp.zeros((mp, b.shape[1]), b.dtype).at[: b.shape[0]].set(b)
+    if c.shape[1] != np_pad:
+        if c.shape[1] > np_pad:
+            raise ValueError(
+                f"sddmm: C has {c.shape[1]} columns but A has {np_pad}")
+        c = jnp.zeros((c.shape[0], np_pad), c.dtype) \
+            .at[:, : c.shape[1]].set(c)
+
+    policy = normalize_policy(policy)
+    if kernel_forced and policy in (POLICY_AUTO, POLICY_AUTOTUNE):
+        policy = PATH_ELL
+
+    traced = _is_traced(a.blocks, a.rows, a.cols)
+    uk = use_kernel if use_kernel is not None else _default_use_kernel(config)
+    if traced:  # blocked path is the only tracer-safe one
+        if policy in (PATH_CSR, PATH_DENSE):
+            raise TypeError(
+                f"dispatch_sddmm: policy {policy!r} needs host-visible "
+                "operand data, but the BlockCOO is traced (inside jit); "
+                "dispatch outside jit or use the ell path")
+        _record(Plan(op="sddmm", path=PATH_ELL, policy=policy,
+                     reason="traced operand: blocked path only",
+                     use_kernel=uk, interpret=interpret))
+        return _run_sddmm_path(PATH_ELL, a, b, c, use_kernel=uk,
+                               interpret=interpret, bk=bk,
+                               out_dtype=out_dtype)
+
+    k = b.shape[1]
+    if policy in (PATH_ELL, PATH_CSR, PATH_DENSE):
+        # forced path: no stats needed (skips the host nonzero count)
+        plan = Plan(op="sddmm", path=policy, policy=policy, reason="forced",
+                    use_kernel=uk, interpret=interpret)
+        _record(plan)
+        return _run_sddmm_path(policy, a, b, c, use_kernel=uk,
+                               interpret=interpret, bk=bk,
+                               out_dtype=out_dtype)
+
+    stats = MatrixStats.from_blockcoo(a)
+
+    if policy == POLICY_AUTOTUNE:
+        cache = cache if cache is not None else autotune_mod.GLOBAL_CACHE
+        key = make_key("sddmm", stats.shape, k, b.dtype, stats.density,
+                       buckets_per_decade=config.buckets_per_decade)
+        hit = cache.get(key)
+        if hit is None:
+            candidates = {
+                p: (lambda p=p: _run_sddmm_path(
+                    p, a, b, c, use_kernel=uk, interpret=interpret,
+                    bk=bk, out_dtype=out_dtype).blocks)
+                for p in (PATH_ELL, PATH_CSR, PATH_DENSE)
+            }
+            hit = measure(candidates, warmup=config.autotune_warmup,
+                          iters=config.autotune_iters)
+            cache.put(key, hit)
+            reason = "autotune: measured " + ", ".join(
+                f"{p}={t:.0f}us" for p, t in sorted(hit.timings_us.items()))
+        else:
+            reason = "autotune: cached winner"
+        plan = Plan(op="sddmm", path=hit.path, policy=POLICY_AUTOTUNE,
+                    reason=reason, use_kernel=uk, interpret=interpret,
+                    timings_us=hit.timings_us, stats=stats)
+    else:
+        plan = plan_sddmm(stats, k, policy=policy, cost_model=cost_model,
+                          config=config, use_kernel=use_kernel,
+                          interpret=interpret)
+    _record(plan)
+    return _run_sddmm_path(plan.path, a, b, c, use_kernel=plan.use_kernel,
+                           interpret=plan.interpret, bk=bk,
+                           out_dtype=out_dtype)

@@ -1,0 +1,68 @@
+"""Dispatch policy vocabulary and configuration.
+
+Execution-path names (shared by SpMM and SDDMM):
+
+  * ``ell``   — the blocked streaming path: Block-ELL for SpMM, Block-COO
+                for SDDMM.  Pallas kernel on TPU, jnp reference elsewhere.
+  * ``csr``   — the element-granular scalar path: CSR gather/segment-sum
+                for SpMM, element-COO for SDDMM.  Exact nnz work, no MXU.
+  * ``dense`` — densified fallback (the paper's Fig. 2 failure mode; only
+                competitive near full density).
+
+Policy names accepted by the public APIs:
+
+  * ``auto``     — analytic cost model picks the path (default).
+  * ``autotune`` — time the candidate paths once, cache the winner per
+                   (op, shape, dtype, sparsity-bucket) key.
+  * one of the path names — force that path.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+PATH_ELL = "ell"
+PATH_CSR = "csr"
+PATH_DENSE = "dense"
+PATHS = (PATH_ELL, PATH_CSR, PATH_DENSE)
+
+POLICY_AUTO = "auto"
+POLICY_AUTOTUNE = "autotune"
+POLICIES = (POLICY_AUTO, POLICY_AUTOTUNE) + PATHS
+
+# historical aliases (SDDMM literature calls the paths by format name)
+_ALIASES = {
+    "block": PATH_ELL,
+    "blockell": PATH_ELL,
+    "blockcoo": PATH_ELL,
+    "coo": PATH_CSR,
+    "element": PATH_CSR,
+    "scalar": PATH_CSR,
+}
+
+
+def normalize_policy(policy: str) -> str:
+    """Canonicalize a policy/path name; raise on unknown names."""
+    p = str(policy).lower()
+    p = _ALIASES.get(p, p)
+    if p not in POLICIES:
+        raise ValueError(
+            f"unknown dispatch policy {policy!r}; expected one of "
+            f"{POLICIES + tuple(_ALIASES)}")
+    return p
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchConfig:
+    """Tunables of the dispatch layer (see dispatch/cost_model.py for the
+    cost-model constants themselves)."""
+
+    # autotune measurement
+    autotune_warmup: int = 1
+    autotune_iters: int = 3
+    # sparsity buckets per density decade for the autotune cache key
+    buckets_per_decade: int = 2
+    # kernel-vs-reference inside the ell path: None = TPU backends only
+    use_kernel: bool | None = None
+
+
+DEFAULT_CONFIG = DispatchConfig()

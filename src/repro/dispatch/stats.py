@@ -1,0 +1,124 @@
+"""Host-side matrix statistics that drive dispatch decisions.
+
+Everything in here is plain Python numbers computed from *concrete*
+(host-visible) sparse operands.  A ``MatrixStats`` is cheap to carry
+around as static metadata (e.g. in a pytree aux field), so consumers
+that run under ``jax.jit`` can still plan at trace time.
+
+The central quantity is the paper's padded-stream blow-up: the ratio of
+elements the Block-ELL/SELLPACK-style layout actually streams (real +
+padding) to the true nonzero count.  The crossover of the paper's Fig. 9
+is exactly the sparsity where that blow-up exceeds the per-element cost
+advantage the streaming path has over the scalar CSR path.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.formats import (BlockCOO, BlockELL, CSR,
+                                blockell_stream_elements)
+
+
+@dataclasses.dataclass(frozen=True)
+class MatrixStats:
+    """Sparsity-structure summary of one sparse operand."""
+
+    shape: Tuple[int, int]        # logical (padded) dense shape
+    nnz: int                      # element-level nonzeros
+    stored_elements: int          # elements the blocked layout streams
+    block_m: int
+    block_n: int
+    n_block_rows: int
+    ell_width: int                # ELL width W (0 for COO layouts)
+    occupancy: float              # real blocks / stored slots (1 = no pad)
+
+    @property
+    def dense_elements(self) -> int:
+        return int(self.shape[0]) * int(self.shape[1])
+
+    @property
+    def density(self) -> float:
+        return self.nnz / max(self.dense_elements, 1)
+
+    @property
+    def sparsity(self) -> float:
+        return 1.0 - self.density
+
+    @property
+    def padded_stream_blowup(self) -> float:
+        """Streamed elements per true nonzero (>= 1; inf for empty A)."""
+        if self.nnz == 0:
+            return float("inf")
+        return self.stored_elements / self.nnz
+
+    # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def from_blockell(ell: BlockELL, nnz: Optional[int] = None
+                      ) -> "MatrixStats":
+        """Stats of a concrete BlockELL (host transfer of `blocks` if
+        ``nnz`` is not supplied)."""
+        if nnz is None:
+            nnz = int(np.count_nonzero(np.asarray(ell.blocks)))
+        nbr, w = ell.n_block_rows, ell.ell_width
+        return MatrixStats(
+            shape=ell.shape,
+            nnz=int(nnz),
+            stored_elements=int(blockell_stream_elements(ell))
+            - nbr * w,  # count data words only, not the index words
+            block_m=ell.bm,
+            block_n=ell.bn,
+            n_block_rows=nbr,
+            ell_width=w,
+            occupancy=ell.occupancy(),
+        )
+
+    @staticmethod
+    def from_blockcoo(coo: BlockCOO, nnz: Optional[int] = None
+                      ) -> "MatrixStats":
+        if nnz is None:
+            nnz = int(np.count_nonzero(np.asarray(coo.blocks)))
+        nnzb = coo.nnzb
+        real = int((np.asarray(coo.blocks).reshape(nnzb, -1) != 0)
+                   .any(axis=1).sum())
+        return MatrixStats(
+            shape=coo.shape,
+            nnz=int(nnz),
+            stored_elements=int(nnzb * coo.bm * coo.bn),
+            block_m=coo.bm,
+            block_n=coo.bn,
+            n_block_rows=coo.shape[0] // coo.bm,
+            ell_width=0,
+            occupancy=real / max(nnzb, 1),
+        )
+
+    @staticmethod
+    def from_csr(csr: CSR, block_m: int = 1, block_n: int = 1
+                 ) -> "MatrixStats":
+        """Element-granular stats (stored == nnz: CSR streams no padding)."""
+        return MatrixStats(
+            shape=csr.shape,
+            nnz=csr.nnz,
+            stored_elements=csr.nnz,
+            block_m=block_m,
+            block_n=block_n,
+            n_block_rows=csr.shape[0],
+            ell_width=0,
+            occupancy=1.0,
+        )
+
+
+def sparsity_bucket(density: float, per_decade: int = 2) -> int:
+    """Discretize density into log10 buckets for autotune cache keys.
+
+    ``per_decade`` buckets per density decade: densities within the same
+    bucket share one autotune measurement.  Density 0 maps to the last
+    bucket (hyper-sparse).
+    """
+    if density <= 0:
+        return 9 * per_decade
+    return int(np.clip(np.floor(-np.log10(density) * per_decade),
+                       0, 9 * per_decade))

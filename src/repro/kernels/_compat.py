@@ -1,0 +1,19 @@
+"""Pallas-TPU API compatibility shims.
+
+The compiler-params container was renamed across pallas releases
+(``TPUCompilerParams`` in the 0.4.x line, ``CompilerParams`` later); all
+kernels build theirs through ``tpu_compiler_params`` so the name guard
+lives in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", None
+) or getattr(pltpu, "TPUCompilerParams")
+
+
+def tpu_compiler_params(**kw):
+    """Construct pallas-TPU compiler params under either API name."""
+    return _COMPILER_PARAMS_CLS(**kw)

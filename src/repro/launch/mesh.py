@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.sharding.specs import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
@@ -18,10 +20,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     import math
     n = math.prod(shape)
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=jax.devices()[:n])
+    return make_mesh(shape, axes, devices=jax.devices()[:n])
 
 
 def make_local_mesh(shape=(1, 1), axes=("data", "model")):
@@ -29,5 +28,4 @@ def make_local_mesh(shape=(1, 1), axes=("data", "model")):
     n = len(jax.devices())
     if shape[0] * shape[1] > n:
         shape = (1, 1)
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)

@@ -65,9 +65,8 @@ def main():
 
     n_dev = len(jax.devices())
     if n_dev > 1:
-        mesh = jax.make_mesh(
-            (n_dev // 2, 2), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.sharding.specs import make_mesh
+        mesh = make_mesh((n_dev // 2, 2), ("data", "model"))
         shard_ctx.set_mesh(mesh)
         sh = param_sharding_tree(params, mesh)
         params = jax.device_put(params, sh)

@@ -22,6 +22,8 @@ from repro.configs.paper_gnn import GNNConfig
 from repro.core.formats import CSR, BlockELL
 from repro.core.sddmm import sddmm_coo
 from repro.core.spmm import csr_to_device_arrays, spmm_csr
+from repro.dispatch.dispatcher import plan_spmm, record_plan
+from repro.dispatch.stats import MatrixStats
 from repro.kernels.spmm.ref import spmm_blockell_ref
 from repro.models.layers import _he
 
@@ -29,20 +31,27 @@ from repro.models.layers import _he
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """Device-side graph: normalized adjacency in two sparse forms."""
+    """Device-side graph: normalized adjacency in two sparse forms.
+
+    ``stats`` is static aux metadata (plain Python numbers), so the
+    dispatch layer can plan the SpMM path at jit trace time even though
+    the adjacency arrays themselves are tracers.
+    """
     ell: BlockELL
     row_ids: Any
     col_ids: Any
     values: Any
     n_nodes: int
+    stats: Any = None  # Optional[MatrixStats]
 
     def tree_flatten(self):
         return (self.ell, self.row_ids, self.col_ids, self.values), \
-            self.n_nodes
+            (self.n_nodes, self.stats)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, n_nodes=aux)
+        n_nodes, stats = aux if isinstance(aux, tuple) else (aux, None)
+        return cls(*children, n_nodes=n_nodes, stats=stats)
 
 
 def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
@@ -58,8 +67,29 @@ def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
     csr = CSR.from_dense(a)
     row_ids, col_ids, values = csr_to_device_arrays(csr)
     ell = BlockELL.from_dense(a, bm=cfg.block_m, bn=cfg.block_n)
+    stats = MatrixStats.from_blockell(ell, nnz=csr.nnz)
     return Graph(ell=ell, row_ids=row_ids, col_ids=col_ids, values=values,
-                 n_nodes=n)
+                 n_nodes=n, stats=stats)
+
+
+def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
+    """One message-passing step A @ H, routed by the dispatch layer.
+
+    The Graph carries the adjacency in Block-ELL and expanded-CSR forms,
+    so those are the candidate paths; the plan is made from the static
+    ``graph.stats`` and is therefore jit-trace safe.
+    """
+    if graph.stats is None:
+        raise ValueError(
+            "graph_spmm: Graph has no sparsity stats; construct it with "
+            "build_graph() (or attach MatrixStats) to use policy routing")
+    plan = plan_spmm(graph.stats, h.shape[-1], policy=policy,
+                     candidates=("ell", "csr"))
+    record_plan(plan)
+    if plan.path == "ell":
+        return spmm_blockell_ref(graph.ell, h)[: graph.n_nodes]
+    return spmm_csr(graph.row_ids, graph.col_ids, graph.values, h,
+                    graph.n_nodes)
 
 
 # ---------------------------------------------------------------------------
@@ -75,11 +105,20 @@ def init_gcn(key, cfg: GNNConfig) -> Dict:
                   for i in range(cfg.n_layers)]}
 
 
-def gcn_forward(params, graph: Graph, x, *, use_blockell: bool = True):
+def gcn_forward(params, graph: Graph, x, *, use_blockell: bool = True,
+                policy: str | None = None):
+    """GCN forward pass.
+
+    ``policy`` (when given) routes each layer's aggregation through the
+    sparsity-adaptive dispatcher ("auto"/"ell"/"csr"); the legacy
+    ``use_blockell`` flag applies otherwise.
+    """
     h = x
     for i, w in enumerate(params["w"]):
         h = h @ w
-        if use_blockell:
+        if policy is not None:
+            h = graph_spmm(graph, h, policy=policy)
+        elif use_blockell:
             h = spmm_blockell_ref(graph.ell, h)[: graph.n_nodes]
         else:
             h = spmm_csr(graph.row_ids, graph.col_ids, graph.values, h,

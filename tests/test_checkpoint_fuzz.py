@@ -1,7 +1,7 @@
 """Property test: checkpoint round-trips arbitrary nested pytrees."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.ft.checkpoint import Checkpointer
 

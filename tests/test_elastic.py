@@ -30,11 +30,13 @@ _SCRIPT = textwrap.dedent("""
                               dtype="float32")
     tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=0,
                                      total_steps=20))
-    step = make_train_step(cfg, tcfg)
     params = init_lm(jax.random.PRNGKey(0), cfg)
     state = init_train_state(params, tcfg)
 
     def run_steps(params, state, mesh, start, n):
+        # fresh step fn per mesh: jit caches the traced jaxpr per function
+        # object, and the jaxpr bakes in shard_hint's mesh constraints
+        step = make_train_step(cfg, tcfg)
         p_sh = param_sharding_tree(params, mesh)
         s_sh = param_sharding_tree(state, mesh)
         params = jax.device_put(params, p_sh)
@@ -48,12 +50,11 @@ _SCRIPT = textwrap.dedent("""
         shard_ctx.clear_mesh()
         return params, state, float(m["loss"])
 
-    mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.sharding.specs import make_mesh
+    mesh_a = make_mesh((4, 2), ("data", "model"))
     # "lost half the fleet": 2x2 mesh
-    mesh_b = jax.make_mesh((2, 2), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2,
-                           devices=jax.devices()[:4])
+    mesh_b = make_mesh((2, 2), ("data", "model"),
+                       devices=jax.devices()[:4])
 
     # reference: 6 steps all on mesh A
     p_ref, s_ref, loss_ref = run_steps(params, state, mesh_a, 0, 6)

@@ -15,6 +15,7 @@ from repro.ft.health import (HealthConfig, Heartbeat, SimulatedCluster,
                              StragglerDetector)
 from repro.ft.resharding import replicated_tree, reshard
 from repro.models.transformer import init_lm
+from repro.sharding.specs import make_mesh
 from repro.train.loop import TrainConfig, init_train_state, make_train_step
 from repro.train.optimizer import OptConfig
 
@@ -87,8 +88,7 @@ def test_failure_restart_resumes_identically(tmp_path):
 
 
 def test_reshard_roundtrip(rng):
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     tree = {"w": jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32))}
     out = reshard(tree, mesh)
     np.testing.assert_array_equal(np.asarray(out["w"]),

@@ -1,7 +1,7 @@
 """Format round-trips + the paper's SELLPACK stream accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.formats import (BlockELL, BlockCOO, CSR,
                                 blockell_stream_elements,
@@ -112,3 +112,82 @@ def test_choose_ell_width_occupancy(rng):
     assert choose_ell_width(counts) == 50
     w = choose_ell_width(counts, occupancy_target=0.5)
     assert w < 50
+
+
+# ---------------------------------------------------------------------------
+# Adversarial roundtrips (dispatcher edge inputs)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("fmt", ["csr", "blockell", "blockcoo"])
+def test_all_zero_matrix_roundtrip(fmt):
+    dense = np.zeros((64, 48), np.float32)
+    if fmt == "csr":
+        csr = CSR.from_dense(dense)
+        assert csr.nnz == 0
+        np.testing.assert_array_equal(csr.to_dense(), dense)
+    elif fmt == "blockell":
+        ell = BlockELL.from_dense(dense, 16, 16)
+        assert ell.ell_width == 1  # padded floor: one (zero) slot per row
+        assert ell.occupancy() == 0.0
+        np.testing.assert_array_equal(ell.to_dense(), dense)
+    else:
+        coo = BlockCOO.from_dense(dense, 16, 16)
+        assert coo.nnzb == 1  # sentinel zero block
+        np.testing.assert_array_equal(coo.to_dense(), dense)
+
+
+@pytest.mark.parametrize("pos", [(0, 0), (63, 47), (17, 31)])
+def test_single_nonzero_roundtrip(pos):
+    dense = np.zeros((64, 48), np.float32)
+    dense[pos] = 3.5
+    for back in (CSR.from_dense(dense).to_dense(),
+                 BlockELL.from_dense(dense, 16, 16).to_dense(),
+                 BlockCOO.from_dense(dense, 16, 16).to_dense()):
+        np.testing.assert_array_equal(back[:64, :48], dense)
+
+
+@pytest.mark.parametrize("m,n,bm,bn", [
+    (65, 47, 16, 16),   # both dims ragged
+    (16, 17, 16, 16),   # one column over
+    (1, 1, 16, 32),     # tiny
+    (31, 128, 32, 64),  # row-ragged only
+])
+def test_non_divisible_shapes_roundtrip(rng, m, n, bm, bn):
+    dense = _rand_sparse(rng, m, n, 0.3)
+    ell = BlockELL.from_dense(dense, bm, bn)
+    assert ell.shape[0] % bm == 0 and ell.shape[1] % bn == 0
+    np.testing.assert_array_equal(ell.to_dense()[:m, :n], dense)
+    coo = BlockCOO.from_dense(dense, bm, bn)
+    np.testing.assert_array_equal(coo.to_dense()[:m, :n], dense)
+
+
+def test_full_density_roundtrip(rng):
+    dense = rng.normal(size=(64, 64)).astype(np.float32)
+    dense[dense == 0] = 1.0  # ensure truly full
+    ell = BlockELL.from_dense(dense, 16, 16)
+    assert ell.ell_width == 4  # every block-column occupied
+    assert ell.occupancy() == 1.0
+    np.testing.assert_array_equal(ell.to_dense(), dense)
+    csr = CSR.from_dense(dense)
+    assert csr.nnz == 64 * 64
+
+
+def test_ell_width_overflow_raises(rng):
+    dense = _rand_sparse(rng, 64, 64, 0.9)
+    with pytest.raises(ValueError, match="ell_width"):
+        BlockELL.from_dense(dense, 16, 16, ell_width=1)
+
+
+def test_sellpack_stream_elements_monotone_in_nnz(rng):
+    """Regression: more nonzeros can never shrink the streamed volume."""
+    n = 128
+    base = rng.random((n, n))
+    prev = None
+    for density in (0.001, 0.01, 0.05, 0.1, 0.3):
+        dense = np.where(base < density, 1.0, 0.0).astype(np.float32)
+        csr = CSR.from_dense(dense)
+        tot = sellpack_stream_elements(csr, max_y_chunk=32, max_v_per_pe=32)
+        if prev is not None:
+            assert tot >= prev, (density, tot, prev)
+        prev = tot

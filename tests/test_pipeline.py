@@ -12,8 +12,8 @@ _SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.train.pipeline import pipeline_apply
 
-    mesh = jax.make_mesh((4,), ("pod",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.sharding.specs import make_mesh
+    mesh = make_mesh((4,), ("pod",))
     rng = np.random.default_rng(0)
     n_stages, n_micro, mb, d = 4, 8, 4, 16
 

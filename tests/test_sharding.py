@@ -7,14 +7,13 @@ from jax.sharding import PartitionSpec as P
 from repro.configs import SHAPES, get_config
 from repro.launch.inputs import abstract_cache, abstract_params
 from repro.sharding import ctx as shard_ctx
-from repro.sharding.specs import cache_spec, param_spec
+from repro.sharding.specs import cache_spec, make_mesh, param_spec
 
 
 @pytest.fixture
 def mesh():
     # a 1x1 mesh carries the axis names without needing fake devices
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def _spec_of(tree, keypath, mesh):
@@ -42,8 +41,7 @@ def test_param_specs_follow_rules(mesh):
 
 
 def test_param_specs_drop_non_divisible_axes():
-    mesh16 = jax.make_mesh((1, 1), ("data", "model"),
-                           axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh16 = make_mesh((1, 1), ("data", "model"))
     # simulate the 16x16 divisibility rule with a fake mesh via _fit
     from repro.sharding.specs import _fit
 
@@ -77,8 +75,7 @@ def test_cache_specs(mesh):
 
 
 def test_logical_dedup():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     shard_ctx.set_mesh(mesh, {"seq": "model", "heads": "model",
                               "batch": ("data",)})
     try:
