@@ -26,9 +26,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_fn
-from repro.dispatch import SparseOperand, last_plan
-from repro.dispatch.dispatcher import dispatch_spmm
+from repro.dispatch import last_plan
 from repro.dispatch.policy import PATHS
+from repro.sparse import SparseMatrix, matmul
 
 SPARSITIES = [0.5, 0.75, 0.9, 0.95, 0.99, 0.995, 0.999]
 # Small blocks keep the block-granular layout honest under *uniform*
@@ -46,29 +46,30 @@ def sweep(n: int = 1024, d: int = 64, *, policy: str = "auto",
         mask = rng.random((n, n)) < (1.0 - s)
         dense = np.where(mask, rng.normal(size=(n, n)), 0.0) \
             .astype(np.float32)
-        op = SparseOperand.from_dense(dense, block_m=BLOCK, block_n=BLOCK)
-        stats = op.stats()
+        op = SparseMatrix.from_dense(dense, formats=("ell", "csr"),
+                                     block=(BLOCK, BLOCK))
+        stats = op.stats
 
         # dispatch under the requested policy (records the plan)
-        dispatch_spmm(op, h, policy=policy)
+        matmul(op, h, policy=policy)
         plan = last_plan("spmm")
 
         # measure every path's jitted steady-state (what a consumer that
         # bakes the plan into its jitted forward actually pays)
         import jax
 
-        from repro.core.spmm import spmm_csr, spmm_dense
         from repro.kernels.spmm.ref import spmm_blockell_ref
+        from repro.sparse.paths import spmm_dense, spmm_elements
 
-        row_ids, col_ids, values = op.csr_arrays()
+        row_ids, col_ids, values = op.form("csr")
         iters = 3 if quick else 5
         times = {
-            "ell": time_fn(jax.jit(spmm_blockell_ref), op.ell(), h,
+            "ell": time_fn(jax.jit(spmm_blockell_ref), op.form("ell"), h,
                            warmup=2, iters=iters),
             "csr": time_fn(
-                jax.jit(lambda r, c, v, hh: spmm_csr(r, c, v, hh, n)),
+                jax.jit(lambda r, c, v, hh: spmm_elements(r, c, v, hh, n)),
                 row_ids, col_ids, values, h, warmup=2, iters=iters),
-            "dense": time_fn(jax.jit(spmm_dense), op.dense_jnp(), h,
+            "dense": time_fn(jax.jit(spmm_dense), jnp.asarray(dense), h,
                              warmup=2, iters=iters),
         }
         measured = min(times, key=times.get)

@@ -20,9 +20,11 @@ from repro.launch.roofline import HBM_BW, PEAK_FLOPS
 D = 2  # paper §4.4: GAT attention-score dimension
 
 
-def run(quick: bool = True, policy: str = "auto"):
+def run(quick: bool = True, policy: str = "auto", api: str = "sparse"):
     from repro.dispatch import last_plan
     from repro.dispatch.dispatcher import dispatch_sddmm
+    from repro.sparse import SparseMatrix
+    from repro.sparse import sddmm as sparse_sddmm
 
     ns = [2048, 4096] if quick else [2048, 4096, 8192]
     densities = [1e-3, 1e-2, 1e-1]
@@ -47,12 +49,20 @@ def run(quick: bool = True, policy: str = "auto"):
                  f"speedup_vs_dense={t_cpu / t_coo:.2f}")
 
             # the dispatch layer's pick under the requested policy
-            coo_a = BlockCOO.from_dense(mask.astype(np.float32), 64, 64)
-            t_disp = time_fn(
-                lambda: dispatch_sddmm(coo_a, jb, jc, policy=policy).blocks,
-                warmup=1, iters=5)
+            if api == "legacy":
+                coo_a = BlockCOO.from_dense(mask.astype(np.float32), 64, 64)
+                t_disp = time_fn(
+                    lambda: dispatch_sddmm(coo_a, jb, jc,
+                                           policy=policy).blocks,
+                    warmup=1, iters=5)
+            else:
+                A = SparseMatrix.from_dense(mask.astype(np.float32),
+                                            formats=("coo", "csr"))
+                t_disp = time_fn(
+                    lambda: sparse_sddmm(A, jb, jc, policy=policy).data,
+                    warmup=1, iters=5)
             plan = last_plan("sddmm")
-            emit(f"sddmm_n{n}_d{density:g}_dispatch_{policy}", t_disp,
+            emit(f"sddmm_n{n}_d{density:g}_dispatch_{policy}_{api}", t_disp,
                  f"chosen={plan.path};policy={plan.policy}")
 
             # mnz sensitivity: Block-COO tile padding overhead (paper: a
@@ -80,5 +90,8 @@ if __name__ == "__main__":
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--policy", default="auto",
                     choices=["auto", "autotune", "ell", "csr", "dense"])
+    ap.add_argument("--api", default="sparse", choices=["legacy", "sparse"],
+                    help="dispatch surface: legacy free functions or the "
+                         "unified SparseMatrix front-end")
     args = ap.parse_args()
-    run(quick=args.quick, policy=args.policy)
+    run(quick=args.quick, policy=args.policy, api=args.api)

@@ -24,11 +24,14 @@ def main() -> None:
                     help="comma-separated bench names")
     ap.add_argument("--policy", default="auto",
                     choices=["auto", "autotune", "ell", "csr", "dense"])
+    ap.add_argument("--api", default="sparse", choices=["legacy", "sparse"],
+                    help="dispatch surface for the spmm/sddmm benches")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_crossover, bench_dense_limit,
                             bench_footprint, bench_sddmm, bench_spmm)
+    from repro.sparse import plan_cache_stats, reset_plan_cache_stats
     benches = {
         "dense_limit": bench_dense_limit.run,
         "footprint": bench_footprint.run,
@@ -37,16 +40,25 @@ def main() -> None:
         "crossover": bench_crossover.run,
     }
     dispatched = {"spmm", "sddmm", "crossover"}
+    api_axis = {"spmm", "sddmm"}
     only = set(args.only.split(",")) if args.only else None
+    reset_plan_cache_stats()
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
-        if name in dispatched:
+        if name in api_axis:
+            fn(quick=quick, policy=args.policy, api=args.api)
+        elif name in dispatched:
             fn(quick=quick, policy=args.policy)
         else:
             fn(quick=quick)
+    pc = plan_cache_stats()
+    emitted = pc["hits"] + pc["misses"]
+    rate = pc["hits"] / emitted if emitted else 0.0
+    print(f"plan_cache,{pc['hits']},misses={pc['misses']};"
+          f"hit_rate={rate:.3f}")
 
 
 if __name__ == "__main__":

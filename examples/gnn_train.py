@@ -31,7 +31,8 @@ def main():
     adj = random_graph(args.n, avg_degree=8, seed=1)
     graph = build_graph(adj, GCFG)
     print(f"graph: {args.n} nodes, {int(adj.sum())} edges; "
-          f"Block-ELL occupancy {graph.ell.occupancy():.2f}")
+          f"adjacency {graph.adj} "
+          f"(Block-ELL occupancy {graph.ell.occupancy():.2f})")
 
     x = jnp.asarray(rng.normal(size=(args.n, GCFG.in_features))
                     .astype(np.float32))
@@ -67,6 +68,12 @@ def main():
             print(f"step {i:4d}  loss {float(l):.4f}  acc {float(acc):.3f}")
     print(f"{args.kind} trained {args.steps} steps in "
           f"{time.time() - t0:.1f}s")
+
+    from repro.dispatch import last_plan
+    from repro.sparse import plan_cache_stats
+    plan = last_plan("spmm")
+    print(f"aggregation dispatch: {plan.describe()}; "
+          f"plan cache {plan_cache_stats()}")
 
 
 if __name__ == "__main__":

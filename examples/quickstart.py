@@ -1,58 +1,76 @@
-"""Quickstart: the paper's two kernels through the public API.
+"""Quickstart: the paper's two kernels through the unified public API.
 
-Runs on CPU in seconds:
-  1. build a random sparse matrix (the paper's synthetic workload),
-  2. SpMM  Y = A @ H   via Block-ELL (SELLPACK-like) format,
-  3. SDDMM Y = A ⊙ (B @ C) via Block-COO,
-  4. the same SpMM distributed 1.5D over a local mesh.
+Everything goes through ``repro.sparse.SparseMatrix`` — one array type
+over the CSR / Block-ELL / Block-COO formats with operator dispatch,
+plan caching, and gradients:
 
-Usage:  PYTHONPATH=src python examples/quickstart.py
+  1. build a SparseMatrix from a random sparse operand (format chosen
+     from its measured structure),
+  2. SpMM  Y = A @ H       — routed by the sparsity-adaptive dispatcher,
+  3. SDDMM via sample(A, B, C) — computed only at A's nonzeros,
+  4. gradients: jax.grad through A @ H — SpMM's backward *is* SDDMM
+     (and vice versa), the paper's kernels closing the training loop,
+  5. the same SpMM distributed 1.5D over a local mesh.
+
+Runs on CPU in seconds:  PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.formats import BlockELL, BlockCOO, CSR, \
-    sellpack_stream_elements
-from repro.core.spmm import spmm
-from repro.core.sddmm import sddmm
 from repro.data.pipeline import random_sparse_dense
+from repro.dispatch import last_plan
+from repro.sparse import SparseMatrix, matmul, plan_cache_stats, sample
 
 
 def main():
     n, d, density = 1024, 256, 0.05
     print(f"== SpMM: N={n}, D={d}, density={density} ==")
     a_dense = random_sparse_dense(n, density, seed=0)
-    h = random_sparse_dense(n, 1.0, seed=1)[:, :d].copy()
+    h = jnp.asarray(random_sparse_dense(n, 1.0, seed=1)[:, :d].copy())
 
-    ell = BlockELL.from_dense(a_dense, bm=64, bn=64)
-    print(f"Block-ELL: {ell.n_block_rows} block-rows x W={ell.ell_width}, "
-          f"occupancy {ell.occupancy():.2f}")
-    y = spmm(ell, jnp.asarray(h), use_kernel=False)  # CPU jnp path
-    err = np.abs(np.asarray(y) - a_dense @ h).max()
-    print(f"SpMM max|err| vs dense = {err:.2e}")
+    A = SparseMatrix.from_dense(a_dense, format="auto")
+    print(f"A = {A}  (format chosen from measured structure; "
+          f"occupancy {A.stats.occupancy:.2f})")
+    y = A @ h
+    plan = last_plan("spmm")
+    err = np.abs(np.asarray(y) - a_dense @ np.asarray(h)).max()
+    print(f"A @ h -> path={plan.path} [{plan.reason[:40]}...]  "
+          f"max|err| vs dense = {err:.2e}")
 
-    # the TPU Pallas kernel, executed in interpret mode for validation
-    y_k = spmm(ell, jnp.asarray(h), interpret=True)
+    # repeated calls hit the per-instance plan cache (no re-planning)
+    for _ in range(3):
+        A @ h
+    print(f"plan cache after 4 calls: {plan_cache_stats()}")
+
+    # the blocked form + TPU Pallas kernel, in interpret mode for
+    # validation (.to() converts between formats on demand)
+    A_ell = A.to("ell")
+    y_k = matmul(A_ell, h, policy="ell", interpret=True)
     print(f"Pallas kernel (interpret) max|err| = "
-          f"{np.abs(np.asarray(y_k) - a_dense @ h).max():.2e}")
-
-    print("\n== footprint (paper Fig. 8) ==")
-    csr = CSR.from_dense(a_dense)
-    streamed = sellpack_stream_elements(csr, max_y_chunk=256,
-                                        max_v_per_pe=64)
-    print(f"CSR nnz = {csr.nnz}; SELLPACK-like streamed elements = "
-          f"{streamed} (ratio {streamed / csr.nnz:.2f})")
+          f"{np.abs(np.asarray(y_k) - a_dense @ np.asarray(h)).max():.2e}")
 
     print(f"\n== SDDMM: N={n}, K=2 (the paper's GAT case) ==")
     mask = (random_sparse_dense(n, density, seed=2) != 0).astype(np.float32)
-    b = random_sparse_dense(n, 1.0, seed=3)[:, :2].copy()
-    c = random_sparse_dense(n, 1.0, seed=4, m=2).copy()  # [2, n]
-    coo = BlockCOO.from_dense(mask, bm=64, bn=64)
-    out = sddmm(coo, jnp.asarray(b), jnp.asarray(c), use_kernel=False)
-    err = np.abs(out.to_dense() - mask * (b @ c)).max()
-    print(f"SDDMM max|err| vs dense = {err:.2e} "
-          f"(computed only {coo.nnzb}/{(n // 64) ** 2} blocks)")
+    b = jnp.asarray(random_sparse_dense(n, 1.0, seed=3)[:, :2].copy())
+    c = jnp.asarray(random_sparse_dense(n, 1.0, seed=4, m=2).copy())
+    M = SparseMatrix.from_dense(mask, format="coo")
+    s = sample(M, b, c)  # = M ⊙ (b @ c), only at M's nonzero blocks
+    err = np.abs(s.to_dense() - mask * np.asarray(b @ c)).max()
+    print(f"sample(M, b, c) max|err| vs dense = {err:.2e} "
+          f"(path={last_plan('sddmm').path})")
+
+    print("\n== gradients: the kernels are each other's backward ==")
+
+    def loss(vals, hh):
+        return jnp.sum(jnp.tanh(A.with_data(vals) @ hh))
+
+    gv, gh = jax.grad(loss, argnums=(0, 1))(A.data, h)
+    from repro.dispatch import dispatch_log
+    vjp_ops = [(p.op, p.path) for p in dispatch_log() if p.policy == "vjp"]
+    print(f"grad(A-values) shape {gv.shape}, grad(H) shape {gh.shape}; "
+          f"backward ran: {vjp_ops[-2:]}  "
+          "(dH is an SpMM on Aᵀ, dA is an SDDMM on A's pattern)")
 
     print("\n== distributed 1.5D SpMM (paper §2.4) ==")
     n_dev = len(jax.devices())
@@ -60,9 +78,9 @@ def main():
         from repro.core.distributed import spmm_1p5d
         from repro.sharding.specs import make_mesh
         mesh = make_mesh((2, n_dev // 2), ("data", "model"))
-        y_d = spmm_1p5d(ell, jnp.asarray(h), mesh)
+        y_d = spmm_1p5d(A_ell, h, mesh)  # accepts the SparseMatrix directly
         print(f"1.5D max|err| = "
-              f"{np.abs(np.asarray(y_d) - a_dense @ h).max():.2e}")
+              f"{np.abs(np.asarray(y_d) - a_dense @ np.asarray(h)).max():.2e}")
     else:
         print(f"only {n_dev} device(s); run with "
               "XLA_FLAGS=--xla_force_host_platform_device_count=8 "

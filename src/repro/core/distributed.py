@@ -34,6 +34,22 @@ from repro.core.formats import BlockELL
 from repro.kernels.spmm.ops import spmm_blockell
 
 
+def _as_blockell(a) -> BlockELL:
+    """Accept a BlockELL or a ``repro.sparse.SparseMatrix``.
+
+    The distributed decompositions shard the blocked layout; a
+    SparseMatrix is unwrapped to its ``"ell"`` form (converting host-side
+    if it carries only other forms).
+    """
+    from repro.sparse.matrix import SparseMatrix
+
+    if isinstance(a, SparseMatrix):
+        if "ell" not in a.formats:
+            a = a.to("ell")
+        return a.form("ell")
+    return a
+
+
 def _ell_specs(ell: BlockELL, row_axis) -> BlockELL:
     """PartitionSpec pytree matching a BlockELL (block-rows sharded)."""
     leaves, treedef = jax.tree_util.tree_flatten(ell)
@@ -45,9 +61,13 @@ def _ell_specs(ell: BlockELL, row_axis) -> BlockELL:
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def spmm_1p5d(ell: BlockELL, h, mesh: Mesh, *, row_axis: str = "data",
+def spmm_1p5d(ell, h, mesh: Mesh, *, row_axis: str = "data",
               use_kernel: bool = False):
-    """1.5D: A row-sharded, H row-sharded + all-gathered per step."""
+    """1.5D: A row-sharded, H row-sharded + all-gathered per step.
+
+    ``ell``: BlockELL or ``repro.sparse.SparseMatrix``.
+    """
+    ell = _as_blockell(ell)
 
     def local(ell_shard: BlockELL, h_shard):
         h_full = jax.lax.all_gather(h_shard, row_axis, axis=0, tiled=True)
@@ -63,9 +83,13 @@ def spmm_1p5d(ell: BlockELL, h, mesh: Mesh, *, row_axis: str = "data",
     return fn(ell, h)
 
 
-def spmm_2d(ell: BlockELL, h, mesh: Mesh, *, row_axis: str = "data",
+def spmm_2d(ell, h, mesh: Mesh, *, row_axis: str = "data",
             col_axis: str = "model", use_kernel: bool = False):
-    """2D: A row-sharded over data, H column-sharded over model; no comm."""
+    """2D: A row-sharded over data, H column-sharded over model; no comm.
+
+    ``ell``: BlockELL or ``repro.sparse.SparseMatrix``.
+    """
+    ell = _as_blockell(ell)
 
     def local(ell_shard: BlockELL, h_shard):
         return spmm_blockell(ell_shard, h_shard, use_kernel=use_kernel)
@@ -80,14 +104,16 @@ def spmm_2d(ell: BlockELL, h, mesh: Mesh, *, row_axis: str = "data",
     return fn(ell, h)
 
 
-def spmm_2p5d(ell: BlockELL, h, mesh: Mesh, *, pod_axis: str = "pod",
+def spmm_2p5d(ell, h, mesh: Mesh, *, pod_axis: str = "pod",
               row_axis: str = "data", use_kernel: bool = False):
     """2.5D multi-pod: H replicated across pods; all-gather intra-pod only.
 
     A's block-rows are sharded over (pod, data) jointly; each pod computes
     its row stripe of Y independently — inter-pod traffic is zero inside
     the kernel (the paper's replication-trades-memory-for-comm point).
+    ``ell``: BlockELL or ``repro.sparse.SparseMatrix``.
     """
+    ell = _as_blockell(ell)
 
     def local(ell_shard: BlockELL, h_shard):
         h_full = jax.lax.all_gather(h_shard, row_axis, axis=0, tiled=True)

@@ -38,9 +38,14 @@ def _cdiv(a: int, b: int) -> int:
 
 @dataclasses.dataclass(frozen=True)
 class CSR:
-    """Compressed sparse row; host-side (numpy) container."""
+    """Compressed sparse row; host-side (numpy) container.
 
-    indptr: np.ndarray  # int64[M+1]
+    Index arrays are int32 end-to-end (matching every device-bound index
+    array in the repo: BlockELL.indices/nblocks, BlockCOO.rows/cols, the
+    expanded element ids); ``from_dense`` asserts nnz fits.
+    """
+
+    indptr: np.ndarray  # int32[M+1]
     indices: np.ndarray  # int32[nnz]
     values: np.ndarray  # dtype[nnz]
     shape: Tuple[int, int]
@@ -55,11 +60,16 @@ class CSR:
         m, n = dense.shape
         mask = dense != 0
         counts = mask.sum(axis=1)
-        indptr = np.zeros(m + 1, dtype=np.int64)
-        np.cumsum(counts, out=indptr[1:])
+        indptr64 = np.zeros(m + 1, dtype=np.int64)
+        np.cumsum(counts, out=indptr64[1:])
+        nnz = int(indptr64[-1])
+        if nnz >= np.iinfo(np.int32).max:
+            raise ValueError(
+                f"nnz={nnz} overflows the int32 index space; shard the "
+                "matrix before building CSR")
         idx = np.nonzero(mask)
         return CSR(
-            indptr=indptr,
+            indptr=indptr64.astype(np.int32),
             indices=idx[1].astype(np.int32),
             values=dense[idx],
             shape=(m, n),

@@ -1,30 +1,34 @@
-"""Public SDDMM API:  Y = A ⊙ (B @ C)  computed only at A's nonzeros.
+"""Legacy SDDMM surface — thin deprecation shim over ``repro.sparse``.
 
-``sddmm`` routes through the sparsity-adaptive dispatch layer
-(repro.dispatch): the blocked Block-COO path, the element-COO scalar
-path, or the dense-sample fallback, per the chosen policy.
+``sddmm()`` keeps working (forwarding through the dispatch machinery)
+but emits a ``DeprecationWarning``; new code should use::
+
+    from repro.sparse import SparseMatrix, sample
+    s = sample(SparseMatrix.from_dense(mask), b, c)   # or A.sddmm(b, c)
+
+See ``repro.sparse.legacy`` for the deprecation timeline.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.formats import BlockCOO
+from repro.core.formats import BlockCOO  # noqa: F401  (legacy re-export)
+from repro.sparse.legacy import warn_deprecated
+from repro.sparse.paths import sddmm_element_dots
 
 
 def sddmm(a, b, c, *, policy: str = "auto", **kw) -> BlockCOO:
-    """SDDMM for sparse-mask A (BlockCOO or dense); returns BlockCOO."""
+    """SDDMM for sparse-mask A (BlockCOO or dense); returns BlockCOO.
+
+    .. deprecated:: use ``repro.sparse.sample`` / ``A.sddmm(b, c)``.
+    """
+    warn_deprecated(
+        "repro.core.sddmm.sddmm",
+        "use repro.sparse: sample(SparseMatrix.from_dense(mask), b, c) "
+        "(policy/use_kernel/interpret move to repro.sparse.ops.sddmm)")
     from repro.dispatch.dispatcher import dispatch_sddmm
 
     return dispatch_sddmm(a, b, c, policy=policy, **kw)
 
 
 def sddmm_coo(row_ids, col_ids, b, c):
-    """Element-granular SDDMM: out[e] = b[row[e]] . c[:, col[e]].
-
-    The scalar path used by GAT on CPU and as the general-pattern oracle.
-    b: [M, K]; c: [K, N] -> values[e] for each coordinate.
-    """
-    bs = b[row_ids].astype(jnp.float32)  # [nnz, K]
-    cs = c.T[col_ids].astype(jnp.float32)  # [nnz, K]
-    return jnp.sum(bs * cs, axis=-1).astype(b.dtype)
+    """Element-granular SDDMM dots (forwards to repro.sparse)."""
+    return sddmm_element_dots(row_ids, col_ids, b, c)

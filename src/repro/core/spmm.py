@@ -1,66 +1,38 @@
-"""Public SpMM API:  Y = A @ H  with sparse A.
+"""Legacy SpMM surface — thin deprecation shim over ``repro.sparse``.
 
-Three execution paths, mirroring the paper's design space:
-  * Block-ELL Pallas kernel (TPU target; `repro.kernels.spmm`) — the
-    SELLPACK-like streaming design.
-  * Block-ELL jnp reference — same math, XLA-fused; CPU path and oracle.
-  * Element-level CSR segment-sum — the general scalar path (and the analog
-    of the paper's initial CSR-streaming design); exact for any sparsity
-    pattern without blocking/padding overhead, but does not use the MXU.
+``spmm()`` (and the per-path helpers below) predate the unified
+``SparseMatrix`` API.  They keep working — forwarding to the dispatch
+machinery / the shared path implementations in ``repro.sparse.paths`` —
+but emit a ``DeprecationWarning`` with the migration hint.  New code
+should use::
 
-``spmm`` routes between them through the sparsity-adaptive dispatch
-layer (repro.dispatch): policy "auto" applies the cost model over the
-operand's measured sparsity structure, "autotune" times the candidates
-once per (shape, dtype, sparsity-bucket), and "ell"/"csr"/"dense" force
-a path.  The low-level per-path entry points below remain public for
-callers that have already planned.
+    from repro.sparse import SparseMatrix
+    y = SparseMatrix.from_dense(a) @ h
+
+See ``repro.sparse.legacy`` for the deprecation timeline.
 """
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.formats import CSR, BlockELL
+from repro.core.formats import CSR, BlockELL  # noqa: F401  (legacy re-export)
+from repro.sparse.legacy import warn_deprecated
+from repro.sparse.paths import (csr_to_device_arrays, spmm_dense,
+                                spmm_elements)
 
 
 def spmm(a, h, *, policy: str = "auto", **kw):
-    """Y = A @ H for sparse A (BlockELL, SparseOperand, or dense).
+    """Y = A @ H for sparse A (BlockELL, SparseMatrix, operand, or dense).
 
-    Dispatches to the Block-ELL kernel/reference, the CSR element path,
-    or the dense fallback based on ``policy`` — see repro.dispatch.
+    .. deprecated:: use ``repro.sparse.SparseMatrix`` / ``A @ h``.
     """
+    warn_deprecated(
+        "repro.core.spmm.spmm",
+        "use repro.sparse: SparseMatrix.from_dense(a) @ h "
+        "(policy/use_kernel/interpret move to repro.sparse.ops.matmul)")
     from repro.dispatch.dispatcher import dispatch_spmm
 
     return dispatch_spmm(a, h, policy=policy, **kw)
 
 
-# ---------------------------------------------------------------------------
-# Element-level CSR path (jnp; the "initial design" analog)
-# ---------------------------------------------------------------------------
-
-
-def csr_to_device_arrays(csr: CSR):
-    """Expand CSR to (row_ids, col_ids, values) device arrays."""
-    row_ids = np.repeat(
-        np.arange(csr.shape[0], dtype=np.int32), np.diff(csr.indptr)
-    )
-    return (
-        jnp.asarray(row_ids),
-        jnp.asarray(csr.indices),
-        jnp.asarray(csr.values),
-    )
-
-
 def spmm_csr(row_ids, col_ids, values, h, num_rows: int):
-    """Y = A @ H via gather + segment-sum (element-granular)."""
-    gathered = values[:, None].astype(jnp.float32) * h[col_ids].astype(
-        jnp.float32
-    )
-    out = jax.ops.segment_sum(gathered, row_ids, num_segments=num_rows)
-    return out.astype(h.dtype)
-
-
-def spmm_dense(a_dense, h):
-    """Dense baseline (the paper's Fig. 2 failure mode)."""
-    return a_dense @ h
+    """Y = A @ H via gather + segment-sum (forwards to repro.sparse)."""
+    return spmm_elements(row_ids, col_ids, values, h, num_rows)

@@ -1,0 +1,121 @@
+"""Internal multi-form operand used by the legacy dispatcher.
+
+One logical matrix, every execution form, converted lazily on the host
+and memoized — the machinery behind the deprecated public
+``dispatch.SparseOperand`` wrapper.  New code should use
+``repro.sparse.SparseMatrix`` (which carries forms as pytree children
+and plans per instance); this class remains so the legacy
+``dispatch_spmm``/``dispatch_sddmm`` entry points keep their behavior.
+
+Conversions are host-side (numpy); this type is NOT a pytree and must
+not cross a ``jax.jit`` boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR, BlockELL
+from repro.dispatch.stats import MatrixStats
+
+Array = Any
+
+
+class LazyForms:
+    """Lazily-converted bundle of {dense, CSR arrays, Block-ELL} forms."""
+
+    def __init__(
+        self,
+        dense: Optional[np.ndarray] = None,
+        *,
+        ell: Optional[BlockELL] = None,
+        csr: Optional[CSR] = None,
+        block_m: int = 64,
+        block_n: int = 64,
+        ell_width: Optional[int] = None,
+    ):
+        if dense is None and ell is None and csr is None:
+            raise ValueError("SparseOperand needs at least one form")
+        self._dense = np.asarray(dense) if dense is not None else None
+        self._ell = ell
+        self._csr = csr
+        self.block_m = ell.bm if ell is not None else block_m
+        self.block_n = ell.bn if ell is not None else block_n
+        self._ell_width = ell_width
+        self._csr_arrays: Optional[Tuple[Array, Array, Array]] = None
+        self._dense_jnp = None
+        self._stats: Optional[MatrixStats] = None
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, dense: np.ndarray, *, block_m: int = 64,
+                   block_n: int = 64,
+                   ell_width: Optional[int] = None) -> "LazyForms":
+        return cls(dense, block_m=block_m, block_n=block_n,
+                   ell_width=ell_width)
+
+    @classmethod
+    def from_blockell(cls, ell: BlockELL) -> "LazyForms":
+        return cls(ell=ell)
+
+    # -- logical shape ------------------------------------------------------
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        """Logical dense shape (unpadded if built from a dense matrix)."""
+        if self._dense is not None:
+            return self._dense.shape
+        if self._csr is not None:
+            return self._csr.shape
+        return self._ell.shape
+
+    # -- forms (memoized) ---------------------------------------------------
+
+    def dense(self) -> np.ndarray:
+        if self._dense is None:
+            if self._ell is not None:
+                self._dense = self._ell.to_dense()
+            else:
+                self._dense = self._csr.to_dense()
+        return self._dense
+
+    def dense_jnp(self):
+        if self._dense_jnp is None:
+            self._dense_jnp = jnp.asarray(self.dense())
+        return self._dense_jnp
+
+    def ell(self) -> BlockELL:
+        if self._ell is None:
+            self._ell = BlockELL.from_dense(
+                self.dense(), bm=self.block_m, bn=self.block_n,
+                ell_width=self._ell_width)
+        return self._ell
+
+    def csr(self) -> CSR:
+        if self._csr is None:
+            self._csr = CSR.from_dense(self.dense())
+        return self._csr
+
+    def csr_arrays(self) -> Tuple[Array, Array, Array]:
+        """(row_ids, col_ids, values) device arrays for the element path."""
+        if self._csr_arrays is None:
+            from repro.sparse.paths import csr_to_device_arrays
+
+            self._csr_arrays = csr_to_device_arrays(self.csr())
+        return self._csr_arrays
+
+    # -- stats --------------------------------------------------------------
+
+    def stats(self) -> MatrixStats:
+        if self._stats is None:
+            if self._csr is not None:
+                nnz = self._csr.nnz
+            elif self._dense is not None:
+                nnz = int(np.count_nonzero(self._dense))
+            else:
+                nnz = None  # count from the ELL blocks
+            self._stats = MatrixStats.from_blockell(self.ell(), nnz=nnz)
+        return self._stats

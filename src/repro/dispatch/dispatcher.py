@@ -33,9 +33,9 @@ import numpy as np
 
 from repro.core.formats import BlockCOO, BlockELL
 from repro.dispatch import autotune as autotune_mod
+from repro.dispatch._forms import LazyForms
 from repro.dispatch.autotune import AutotuneCache, make_key, measure
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
-from repro.dispatch.operand import SparseOperand
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATH_CSR,
                                    PATH_DENSE, PATH_ELL, POLICY_AUTO,
                                    POLICY_AUTOTUNE, normalize_policy)
@@ -176,26 +176,33 @@ def _plan(op, costs, stats, *, policy, config, use_kernel, interpret,
 # ---------------------------------------------------------------------------
 
 
-def _as_spmm_operand(a) -> Tuple[Optional[SparseOperand], Optional[BlockELL]]:
+def _as_spmm_operand(a) -> Tuple[Optional[LazyForms], Optional[BlockELL]]:
     """Returns (operand, raw_ell).  operand is None for traced input."""
-    if isinstance(a, SparseOperand):
+    from repro.sparse.matrix import SparseMatrix
+
+    if isinstance(a, SparseMatrix):
+        if "ell" in a.formats:
+            return LazyForms.from_blockell(a.form("ell")), None
+        return LazyForms.from_dense(a.to_dense()), None
+    if isinstance(a, LazyForms):
         return a, None
     if isinstance(a, BlockELL):
         if _is_traced(a.blocks, a.indices):
             return None, a
-        return SparseOperand.from_blockell(a), None
+        return LazyForms.from_blockell(a), None
     arr = np.asarray(a) if not _is_traced(a) else None
     if arr is None:
         raise TypeError(
             "dispatch_spmm: traced dense operand; pass a BlockELL (blocked "
             "fallback) or plan outside jit with plan_spmm + static stats")
-    return SparseOperand.from_dense(arr), None
+    return LazyForms.from_dense(arr), None
 
 
-def _run_spmm_path(path: str, op: SparseOperand, h, *, use_kernel: bool,
+def _run_spmm_path(path: str, op: LazyForms, h, *, use_kernel: bool,
                    interpret: bool, bd=None, out_dtype=None):
-    from repro.core.spmm import spmm_csr, spmm_dense
     from repro.kernels.spmm.ops import spmm_blockell
+    from repro.sparse.paths import spmm_dense
+    from repro.sparse.paths import spmm_elements as spmm_csr
 
     m = op.shape[0]
     if h.shape[0] != op.shape[1]:
@@ -238,21 +245,19 @@ def dispatch_spmm(
 ):
     """Y = A @ H through the sparsity-adaptive dispatch layer.
 
-    ``a``: BlockELL, SparseOperand, or a concrete dense matrix.
-    Explicit ``use_kernel``/``interpret`` force the blocked path (they
-    parameterize it, so requesting them implies it) — this keeps the
-    legacy ``spmm(ell, h, use_kernel=False)`` call sites meaningful.
+    ``a``: BlockELL, SparseMatrix, SparseOperand, or a concrete dense
+    matrix.  Explicit ``use_kernel``/``interpret`` force the blocked
+    path (the legacy kwarg rule, consolidated in
+    ``repro.sparse.legacy.coerce_kernel_kwargs``).
     """
-    kernel_forced = use_kernel is not None or interpret is not None
-    interpret = bool(interpret)
+    from repro.sparse.legacy import coerce_kernel_kwargs
+
+    policy, use_kernel, interpret, _ = coerce_kernel_kwargs(
+        policy, use_kernel, interpret)
     h_was_1d = h.ndim == 1
     if h_was_1d:
         h = h[:, None]
     operand, raw_ell = _as_spmm_operand(a)
-
-    policy = normalize_policy(policy)
-    if kernel_forced and policy in (POLICY_AUTO, POLICY_AUTOTUNE):
-        policy = PATH_ELL
 
     if operand is None:  # traced BlockELL: blocked path is the only option
         from repro.kernels.spmm.ops import spmm_blockell
@@ -339,8 +344,8 @@ def _coo_element_coords(coo: BlockCOO):
 
 def _run_sddmm_path(path: str, coo: BlockCOO, b, c, *, use_kernel: bool,
                     interpret: bool, bk=None, out_dtype=None) -> BlockCOO:
-    from repro.core.sddmm import sddmm_coo
     from repro.kernels.sddmm.ops import sddmm_blockcoo
+    from repro.sparse.paths import sddmm_element_dots as sddmm_coo
 
     if path == PATH_ELL:
         return sddmm_blockcoo(coo, b, c, bk=bk, out_dtype=out_dtype,
@@ -390,12 +395,20 @@ def dispatch_sddmm(
     the blocked (Block-COO) path, "csr" the element-COO path, "dense"
     the full-product-then-sample fallback.
     """
-    kernel_forced = use_kernel is not None or interpret is not None
-    interpret = bool(interpret)
+    from repro.sparse.legacy import coerce_kernel_kwargs
+
+    policy, use_kernel, interpret, _ = coerce_kernel_kwargs(
+        policy, use_kernel, interpret)
     if not isinstance(a, BlockCOO):
-        if _is_traced(a):
+        from repro.sparse.matrix import SparseMatrix
+
+        if isinstance(a, SparseMatrix):
+            a = a.form("coo") if "coo" in a.formats \
+                else BlockCOO.from_dense(a.to_dense(), 64, 64)
+        elif _is_traced(a):
             raise TypeError("dispatch_sddmm: traced dense operand")
-        a = BlockCOO.from_dense(np.asarray(a), 64, 64)
+        else:
+            a = BlockCOO.from_dense(np.asarray(a), 64, 64)
 
     # A's BlockCOO shape is block-padded; pad B/C to match so every path
     # (block reshape, element gather, dense product) sees aligned shapes.
@@ -412,10 +425,6 @@ def dispatch_sddmm(
                 f"sddmm: C has {c.shape[1]} columns but A has {np_pad}")
         c = jnp.zeros((c.shape[0], np_pad), c.dtype) \
             .at[:, : c.shape[1]].set(c)
-
-    policy = normalize_policy(policy)
-    if kernel_forced and policy in (POLICY_AUTO, POLICY_AUTOTUNE):
-        policy = PATH_ELL
 
     traced = _is_traced(a.blocks, a.rows, a.cols)
     uk = use_kernel if use_kernel is not None else _default_use_kernel(config)

@@ -1,121 +1,27 @@
-"""Multi-format sparse operand: one logical matrix, every execution form.
+"""Deprecated public operand wrapper — use ``repro.sparse.SparseMatrix``.
 
-The dispatcher may route one logical SpMM through the Block-ELL kernel,
-the CSR segment-sum path, or a dense matmul — each needs the operand in
-a different layout.  ``SparseOperand`` owns the conversions and memoizes
-them, so consumers build it once (host side) and every path is cheap to
-try afterwards (which is exactly what the autotune pass does).
+``SparseOperand`` was the pre-``repro.sparse`` multi-format wrapper.
+Constructing one still works (it forwards to the internal machinery the
+legacy dispatcher keeps using) but emits a ``DeprecationWarning``; the
+replacement carries its forms as pytree children, adds operators,
+gradients, and per-instance plan caching::
 
-Conversions are host-side (numpy); this type is NOT a pytree and must
-not cross a ``jax.jit`` boundary — pass the individual device arrays (or
-a precomputed ``Plan``) instead.
+    from repro.sparse import SparseMatrix
+    A = SparseMatrix.from_dense(dense)        # instead of SparseOperand
+    y = A @ h                                 # instead of dispatch_spmm
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
-
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.formats import CSR, BlockELL
-from repro.dispatch.stats import MatrixStats
-
-Array = Any
+from repro.dispatch._forms import LazyForms
+from repro.sparse.legacy import warn_deprecated
 
 
-class SparseOperand:
-    """Lazily-converted bundle of {dense, CSR arrays, Block-ELL} forms."""
+class SparseOperand(LazyForms):
+    """Deprecated; see ``repro.sparse.SparseMatrix``."""
 
-    def __init__(
-        self,
-        dense: Optional[np.ndarray] = None,
-        *,
-        ell: Optional[BlockELL] = None,
-        csr: Optional[CSR] = None,
-        block_m: int = 64,
-        block_n: int = 64,
-        ell_width: Optional[int] = None,
-    ):
-        if dense is None and ell is None and csr is None:
-            raise ValueError("SparseOperand needs at least one form")
-        self._dense = np.asarray(dense) if dense is not None else None
-        self._ell = ell
-        self._csr = csr
-        self.block_m = ell.bm if ell is not None else block_m
-        self.block_n = ell.bn if ell is not None else block_n
-        self._ell_width = ell_width
-        self._csr_arrays: Optional[Tuple[Array, Array, Array]] = None
-        self._dense_jnp = None
-        self._stats: Optional[MatrixStats] = None
-
-    # -- constructors -------------------------------------------------------
-
-    @staticmethod
-    def from_dense(dense: np.ndarray, *, block_m: int = 64,
-                   block_n: int = 64,
-                   ell_width: Optional[int] = None) -> "SparseOperand":
-        return SparseOperand(dense, block_m=block_m, block_n=block_n,
-                             ell_width=ell_width)
-
-    @staticmethod
-    def from_blockell(ell: BlockELL) -> "SparseOperand":
-        return SparseOperand(ell=ell)
-
-    # -- logical shape ------------------------------------------------------
-
-    @property
-    def shape(self) -> Tuple[int, int]:
-        """Logical dense shape (unpadded if built from a dense matrix)."""
-        if self._dense is not None:
-            return self._dense.shape
-        if self._csr is not None:
-            return self._csr.shape
-        return self._ell.shape
-
-    # -- forms (memoized) ---------------------------------------------------
-
-    def dense(self) -> np.ndarray:
-        if self._dense is None:
-            if self._ell is not None:
-                self._dense = self._ell.to_dense()
-            else:
-                self._dense = self._csr.to_dense()
-        return self._dense
-
-    def dense_jnp(self):
-        if self._dense_jnp is None:
-            self._dense_jnp = jnp.asarray(self.dense())
-        return self._dense_jnp
-
-    def ell(self) -> BlockELL:
-        if self._ell is None:
-            self._ell = BlockELL.from_dense(
-                self.dense(), bm=self.block_m, bn=self.block_n,
-                ell_width=self._ell_width)
-        return self._ell
-
-    def csr(self) -> CSR:
-        if self._csr is None:
-            self._csr = CSR.from_dense(self.dense())
-        return self._csr
-
-    def csr_arrays(self) -> Tuple[Array, Array, Array]:
-        """(row_ids, col_ids, values) device arrays for the element path."""
-        if self._csr_arrays is None:
-            from repro.core.spmm import csr_to_device_arrays
-
-            self._csr_arrays = csr_to_device_arrays(self.csr())
-        return self._csr_arrays
-
-    # -- stats --------------------------------------------------------------
-
-    def stats(self) -> MatrixStats:
-        if self._stats is None:
-            if self._csr is not None:
-                nnz = self._csr.nnz
-            elif self._dense is not None:
-                nnz = int(np.count_nonzero(self._dense))
-            else:
-                nnz = None  # count from the ELL blocks
-            self._stats = MatrixStats.from_blockell(self.ell(), nnz=nnz)
-        return self._stats
+    def __init__(self, *args, **kwargs):
+        warn_deprecated(
+            "dispatch.SparseOperand",
+            "use repro.sparse.SparseMatrix (multi-form via "
+            "SparseMatrix.from_dense(a, formats=(...)))")
+        super().__init__(*args, **kwargs)

@@ -5,53 +5,72 @@ GAT layer:   e = SDDMM(A, B, C) with d=2   — per paper §4.4, B/C hold source
              /destination attention scores; then segment-softmax over each
              row's edges and SpMM with the attention-weighted adjacency.
 
-The adjacency is carried in both Block-ELL (MXU path) and expanded-CSR
-(element path) forms; GCN uses Block-ELL SpMM, GAT's edge-granular
-softmax uses the CSR arrays (row_ids/col_ids/values).
+The adjacency is one ``repro.sparse.SparseMatrix`` carrying both the
+Block-ELL (MXU path) and element (scalar path) forms, so the dispatch
+layer can route either path at jit trace time from the static stats the
+matrix carries.  Both products run through the unified differentiable
+front-end: training gradients flow through the custom_vjp rules where
+SpMM's backward is SDDMM and vice versa.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.paper_gnn import GNNConfig
-from repro.core.formats import CSR, BlockELL
-from repro.core.sddmm import sddmm_coo
-from repro.core.spmm import csr_to_device_arrays, spmm_csr
-from repro.dispatch.dispatcher import plan_spmm, record_plan
-from repro.dispatch.stats import MatrixStats
-from repro.kernels.spmm.ref import spmm_blockell_ref
 from repro.models.layers import _he
+from repro.sparse import SparseMatrix, matmul, sample
+
+# adjacency paths a Graph can execute (it carries ell + csr forms; the
+# densified fallback is deliberately excluded from auto planning)
+GRAPH_PATHS = ("ell", "csr")
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True)
 class Graph:
-    """Device-side graph: normalized adjacency in two sparse forms.
+    """Device-side graph: normalized adjacency as one ``SparseMatrix``.
 
-    ``stats`` is static aux metadata (plain Python numbers), so the
-    dispatch layer can plan the SpMM path at jit trace time even though
-    the adjacency arrays themselves are tracers.
+    The matrix's ``stats`` are static aux metadata (plain Python
+    numbers), so the dispatch layer can plan the SpMM path at jit trace
+    time even though the adjacency arrays themselves are tracers.
     """
-    ell: BlockELL
-    row_ids: Any
-    col_ids: Any
-    values: Any
+    adj: SparseMatrix
     n_nodes: int
-    stats: Any = None  # Optional[MatrixStats]
 
     def tree_flatten(self):
-        return (self.ell, self.row_ids, self.col_ids, self.values), \
-            (self.n_nodes, self.stats)
+        return (self.adj,), (self.n_nodes,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        n_nodes, stats = aux if isinstance(aux, tuple) else (aux, None)
-        return cls(*children, n_nodes=n_nodes, stats=stats)
+        (adj,) = children
+        return cls(adj=adj, n_nodes=aux[0])
+
+    # -- legacy accessors (pre-SparseMatrix callers) ------------------------
+
+    @property
+    def ell(self):
+        return self.adj.form("ell")
+
+    @property
+    def stats(self):
+        return self.adj.stats if self.adj is not None else None
+
+    @property
+    def row_ids(self):
+        return self.adj.form("csr")[0]
+
+    @property
+    def col_ids(self):
+        return self.adj.form("csr")[1]
+
+    @property
+    def values(self):
+        return self.adj.form("csr")[2]
 
 
 def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
@@ -64,32 +83,24 @@ def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
         deg = a.sum(1)
         dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
         a = a * dinv[:, None] * dinv[None, :]
-    csr = CSR.from_dense(a)
-    row_ids, col_ids, values = csr_to_device_arrays(csr)
-    ell = BlockELL.from_dense(a, bm=cfg.block_m, bn=cfg.block_n)
-    stats = MatrixStats.from_blockell(ell, nnz=csr.nnz)
-    return Graph(ell=ell, row_ids=row_ids, col_ids=col_ids, values=values,
-                 n_nodes=n, stats=stats)
+    adj = SparseMatrix.from_dense(a, formats=("ell", "csr"),
+                                  block=(cfg.block_m, cfg.block_n))
+    return Graph(adj=adj, n_nodes=n)
 
 
 def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
     """One message-passing step A @ H, routed by the dispatch layer.
 
-    The Graph carries the adjacency in Block-ELL and expanded-CSR forms,
-    so those are the candidate paths; the plan is made from the static
-    ``graph.stats`` and is therefore jit-trace safe.
+    The adjacency carries Block-ELL and element forms, so those are the
+    candidate paths; the plan is made from the matrix's static stats and
+    is therefore jit-trace safe (and memoized per graph instance).
     """
-    if graph.stats is None:
+    if graph.adj is None or graph.adj.stats is None:
         raise ValueError(
-            "graph_spmm: Graph has no sparsity stats; construct it with "
-            "build_graph() (or attach MatrixStats) to use policy routing")
-    plan = plan_spmm(graph.stats, h.shape[-1], policy=policy,
-                     candidates=("ell", "csr"))
-    record_plan(plan)
-    if plan.path == "ell":
-        return spmm_blockell_ref(graph.ell, h)[: graph.n_nodes]
-    return spmm_csr(graph.row_ids, graph.col_ids, graph.values, h,
-                    graph.n_nodes)
+            "graph_spmm: Graph adjacency has no sparsity stats; construct "
+            "it with build_graph() (or SparseMatrix.from_dense) to use "
+            "policy routing")
+    return matmul(graph.adj, h, policy=policy, candidates=GRAPH_PATHS)
 
 
 # ---------------------------------------------------------------------------
@@ -106,23 +117,19 @@ def init_gcn(key, cfg: GNNConfig) -> Dict:
 
 
 def gcn_forward(params, graph: Graph, x, *, use_blockell: bool = True,
-                policy: str | None = None):
+                policy: Optional[str] = None):
     """GCN forward pass.
 
     ``policy`` (when given) routes each layer's aggregation through the
     sparsity-adaptive dispatcher ("auto"/"ell"/"csr"); the legacy
-    ``use_blockell`` flag applies otherwise.
+    ``use_blockell`` flag forces the corresponding path otherwise.
     """
+    if policy is None:
+        policy = "ell" if use_blockell else "csr"
     h = x
     for i, w in enumerate(params["w"]):
         h = h @ w
-        if policy is not None:
-            h = graph_spmm(graph, h, policy=policy)
-        elif use_blockell:
-            h = spmm_blockell_ref(graph.ell, h)[: graph.n_nodes]
-        else:
-            h = spmm_csr(graph.row_ids, graph.col_ids, graph.values, h,
-                         graph.n_nodes)
+        h = graph_spmm(graph, h, policy=policy)
         if i < len(params["w"]) - 1:
             h = jax.nn.relu(h)
     return h
@@ -157,6 +164,10 @@ def _segment_softmax(scores, row_ids, n_rows):
 def gat_forward(params, graph: Graph, x):
     h = x
     n = graph.n_nodes
+    # 0/1 edge pattern in element form: the SDDMM sampling operand (the
+    # attention scores ignore the normalized adjacency weights)
+    patt = graph.adj.to("csr").pattern()
+    row_ids = graph.row_ids
     for i, w in enumerate(params["w"]):
         h = h @ w
         s_src = (h @ params["a_src"][i])[:, 0]  # [N]
@@ -164,10 +175,10 @@ def gat_forward(params, graph: Graph, x):
         # SDDMM with K=2 (paper §4.4): B=[s_src, 1], C=[[1],[s_dst]]
         b = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)  # [N,2]
         c = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=0)  # [2,N]
-        e = sddmm_coo(graph.row_ids, graph.col_ids, b, c)  # [nnz]
+        e = sample(patt, b, c, policy="csr").data  # [nnz]
         e = jax.nn.leaky_relu(e, 0.2)
-        alpha = _segment_softmax(e, graph.row_ids, n)
-        h = spmm_csr(graph.row_ids, graph.col_ids, alpha, h, n)
+        alpha = _segment_softmax(e, row_ids, n)
+        h = matmul(patt.with_data(alpha), h, policy="csr")
         if i < len(params["w"]) - 1:
             h = jax.nn.elu(h)
     return h

@@ -87,20 +87,20 @@ class GNNServingEngine:
 
     def __init__(self, params, graph, scfg: Optional[GNNServeConfig] = None):
         from repro.dispatch.dispatcher import plan_spmm
-        from repro.models.gnn import gcn_forward
+        from repro.models.gnn import GRAPH_PATHS, gcn_forward
 
         self.params = params
         self.graph = graph
         self.scfg = scfg or GNNServeConfig()
-        if graph.stats is None:
+        if graph.adj is None or graph.adj.stats is None:
             raise ValueError(
-                "GNNServingEngine: Graph has no sparsity stats; construct "
-                "it with build_graph()")
+                "GNNServingEngine: Graph adjacency has no sparsity stats; "
+                "construct it with build_graph()")
         # feature width varies per layer; plan with the first layer's
         # output width (the widths only scale every path's cost equally)
         d = int(np.asarray(params["w"][0]).shape[1])
-        self.plan = plan_spmm(graph.stats, d, policy=self.scfg.policy,
-                              candidates=("ell", "csr"))
+        self.plan = plan_spmm(graph.adj.stats, d, policy=self.scfg.policy,
+                              candidates=GRAPH_PATHS)
 
         def fwd(p, g, x):
             return gcn_forward(p, g, x, policy=self.plan.path)
@@ -118,7 +118,9 @@ class GNNServingEngine:
 
     def dispatch_report(self) -> Dict:
         """Which path serves this graph's traffic, and why."""
-        stats = self.graph.stats
+        from repro.sparse import plan_cache_stats
+
+        stats = self.graph.adj.stats
         return {
             "path": self.plan.path,
             "policy": self.plan.policy,
@@ -127,6 +129,7 @@ class GNNServingEngine:
             "occupancy": stats.occupancy,
             "padded_stream_blowup": stats.padded_stream_blowup,
             "n_requests": self.n_requests,
+            "plan_cache": plan_cache_stats(),
         }
 
 

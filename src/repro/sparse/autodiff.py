@@ -1,0 +1,236 @@
+"""custom_vjp rules wiring the paper's two kernels into each other.
+
+SpMM and SDDMM are transpose/backward duals (Gale et al., *Sparse GPU
+Kernels for Deep Learning*): for ``Y = A @ H``,
+
+  * ``dH = Aᵀ @ ḡ``            — another SpMM, on the transposed operand;
+  * ``dA = pattern(A) ⊙ (ḡ Hᵀ)`` — exactly SDDMM sampled on A's nonzero
+    topology.
+
+and for ``S = A ⊙ (B C)``,
+
+  * ``dA = ḡ ⊙ (B C)``          — elementwise on the stored values;
+  * ``dB = (A ⊙ ḡ) @ Cᵀ``       — an SpMM with the cotangent-weighted A;
+  * ``dC = ((A ⊙ ḡ)ᵀ @ B)ᵀ``    — the transposed SpMM.
+
+Each rule executes through the same path the forward ran (ell / csr /
+dense) and records its decision in the dispatch log, so the duality is
+observable: after a backward pass ``dispatch_log()`` contains the
+partner op's plan.
+
+Gradient semantics: cotangents flow to the *stored values* of the form
+the forward pass read; structural zeros (padding slots, element zeros)
+receive zero gradient so SGD can never resurrect pruned entries.
+Integer topology arrays get ``float0`` cotangents.  Secondary forms of
+a multi-form matrix were not read by the forward computation, so their
+values correctly receive zero.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BlockCOO
+from repro.dispatch.dispatcher import Plan, record_plan
+from repro.dispatch.policy import PATH_CSR, PATH_DENSE, PATH_ELL
+from repro.sparse import paths
+from repro.sparse.matrix import SparseMatrix, values_of, with_values
+
+# cfg: (path, use_kernel, interpret, bd_or_bk, out_dtype_str) — hashable,
+# resolved by the planner in ops.py before the differentiable call.
+Cfg = Tuple[str, bool, bool, Optional[int], Optional[str]]
+
+
+def _float0_like(x):
+    return np.zeros(np.shape(x), dtype=jax.dtypes.float0)
+
+
+def _cotangent_like(a: SparseMatrix, form_name: str,
+                    dvals) -> SparseMatrix:
+    """A-structured cotangent: dvals on ``form_name``'s values leaf,
+    zeros on other forms' values, float0 on integer topology arrays."""
+    forms = {}
+    for name, form in a._forms.items():
+        v = values_of(name, form)
+        dv = dvals if name == form_name else jnp.zeros_like(v)
+        if name == "csr":
+            forms[name] = (_float0_like(form[0]), _float0_like(form[1]), dv)
+        elif name == "ell":
+            forms[name] = type(form)(
+                indices=_float0_like(form.indices), blocks=dv,
+                nblocks=_float0_like(form.nblocks), shape=form.shape)
+        else:
+            forms[name] = type(form)(
+                rows=_float0_like(form.rows), cols=_float0_like(form.cols),
+                blocks=dv, shape=form.shape)
+    return SparseMatrix(forms, a.shape, a.stats, cache=a._cache)
+
+
+def form_read_by(a: SparseMatrix, path: str) -> str:
+    """Which carried form a given execution path reads."""
+    if path == PATH_CSR:
+        return "csr"
+    if path == PATH_ELL:
+        return "ell" if "ell" in a._forms else "coo"
+    return a.format  # dense path densifies the primary form
+
+
+# ---------------------------------------------------------------------------
+# Path execution (shared by forward and both backward rules)
+# ---------------------------------------------------------------------------
+
+
+def spmm_exec(cfg: Cfg, a: SparseMatrix, h):
+    """Run one planned SpMM path; h: [N, D] logical rows; returns [M, D]."""
+    path, use_kernel, interpret, bd, out_dtype = cfg
+    m = a.shape[0]
+    if path == PATH_ELL:
+        if "ell" in a._forms:
+            ell = a._forms["ell"]
+            y = paths.spmm_ell(ell, paths.pad_rows(h, ell.shape[1]),
+                               use_kernel=use_kernel, interpret=interpret,
+                               bd=bd, out_dtype=out_dtype)
+        else:
+            coo = a._forms["coo"]
+            y = paths.spmm_coo(coo, paths.pad_rows(h, coo.shape[1]),
+                               out_dtype=out_dtype)
+        return y[:m]
+    if path == PATH_CSR:
+        r, c, v = a.form("csr")
+        y = paths.spmm_elements(r, c, v, h, m)
+        return y.astype(out_dtype) if out_dtype else y
+    if path == PATH_DENSE:
+        y = paths.spmm_dense(a.densify(), h)
+        return y.astype(out_dtype) if out_dtype else y
+    raise ValueError(f"unknown spmm path {path!r}")
+
+
+def sample_exec(cfg: Cfg, a: SparseMatrix, b, c):
+    """Raw sampled dots (B @ C at A's stored slots), in the layout of the
+    form the path reads — the unweighted SDDMM the backward rules share."""
+    path, use_kernel, interpret, bk, _ = cfg
+    form_name = form_read_by(a, path)
+    form = a._forms[form_name]
+    if path == PATH_CSR:
+        return paths.sddmm_element_dots(form[0], form[1], b, c)
+    if path == PATH_ELL:
+        coo = paths.ell_to_coo(form) if form_name == "ell" else form
+        ones = BlockCOO(rows=coo.rows, cols=coo.cols,
+                        blocks=jnp.ones_like(coo.blocks), shape=coo.shape)
+        out = paths.sddmm_blocked(
+            ones, paths.pad_rows(b, coo.shape[0]),
+            paths.pad_cols(c, coo.shape[1]),
+            use_kernel=use_kernel, interpret=interpret, bk=bk).blocks
+        if form_name == "ell":
+            return out.reshape(form.blocks.shape)
+        return out
+    if path == PATH_DENSE:
+        full = b.astype(jnp.float32) @ c.astype(jnp.float32)
+        if form_name == "csr":
+            return full[form[0], form[1]].astype(b.dtype)
+        coo = paths.ell_to_coo(form) if form_name == "ell" else form
+        full = paths.pad_cols(paths.pad_rows(full, coo.shape[0]),
+                              coo.shape[1])
+        out = paths.sample_blocks(full, coo.rows, coo.cols,
+                                  coo.bm, coo.bn).astype(b.dtype)
+        if form_name == "ell":
+            return out.reshape(form.blocks.shape)
+        return out
+    raise ValueError(f"unknown sddmm path {path!r}")
+
+
+def _mask_structural(vals, grad):
+    """Zero the gradient at structural zeros (padding, pruned entries)."""
+    return jnp.where(vals != 0, grad, jnp.zeros_like(grad)) \
+        .astype(vals.dtype)
+
+
+def _record_vjp(op: str, path: str, reason: str, cfg: Cfg) -> None:
+    record_plan(Plan(op=op, path=path, policy="vjp", reason=reason,
+                     use_kernel=bool(cfg[1]), interpret=bool(cfg[2])))
+
+
+# ---------------------------------------------------------------------------
+# SpMM: Y = A @ H
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def spmm(cfg: Cfg, a: SparseMatrix, h):
+    return spmm_exec(cfg, a, h)
+
+
+def _spmm_fwd(cfg: Cfg, a: SparseMatrix, h):
+    return spmm_exec(cfg, a, h), (a, h)
+
+
+def _spmm_bwd(cfg: Cfg, res, g):
+    path = cfg[0]
+    a, h = res
+    # dH = Aᵀ @ ḡ : SpMM on the transposed operand, same path (Block-ELL
+    # transposes into Block-COO, which the blocked path also executes).
+    dh = spmm_exec((path, cfg[1], cfg[2], None, None), a.T, g)
+    _record_vjp("spmm", path, "vjp: dH = Aᵀ @ ḡ (spmm backward)", cfg)
+    # dA = pattern(A) ⊙ (ḡ @ Hᵀ) : SDDMM on A's nonzero topology.
+    form_name = form_read_by(a, path)
+    raw = sample_exec((path, cfg[1], cfg[2], None, None), a, g, h.T)
+    _record_vjp("sddmm", path,
+                "vjp: dA = pattern(A) ⊙ (ḡ @ Hᵀ) (spmm backward is sddmm)",
+                cfg)
+    vals = values_of(form_name, a._forms[form_name])
+    da = _cotangent_like(a, form_name, _mask_structural(vals, raw))
+    return da, dh.astype(h.dtype)
+
+
+spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SDDMM: S = A ⊙ (B @ C)  (values in the layout of the form the path reads)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def sddmm_values(cfg: Cfg, a: SparseMatrix, b, c):
+    return _sddmm_fwd(cfg, a, b, c)[0]
+
+
+def _sddmm_fwd(cfg: Cfg, a: SparseMatrix, b, c):
+    raw = sample_exec(cfg, a, b, c)
+    form_name = form_read_by(a, cfg[0])
+    vals = values_of(form_name, a._forms[form_name])
+    out = vals.astype(jnp.float32) * raw.astype(jnp.float32)
+    out_dtype = cfg[4] or jnp.result_type(vals.dtype, b.dtype)
+    return out.astype(out_dtype), (a, b, c, raw)
+
+
+def _sddmm_bwd(cfg: Cfg, res, g):
+    path = cfg[0]
+    a, b, c, raw = res
+    form_name = form_read_by(a, path)
+    vals = values_of(form_name, a._forms[form_name])
+    # dA = ḡ ⊙ (B C) sampled — elementwise on the stored values.
+    dvals = _mask_structural(
+        vals, g.astype(jnp.float32) * raw.astype(jnp.float32))
+    da = _cotangent_like(a, form_name, dvals)
+    # M = A ⊙ ḡ shares A's topology; both remaining grads are SpMMs.
+    mg = (vals.astype(jnp.float32) * g.astype(jnp.float32))
+    m_mat = SparseMatrix(
+        {form_name: with_values(form_name, a._forms[form_name],
+                                mg.astype(vals.dtype))},
+        a.shape, a.stats, cache=a._cache)
+    exec_cfg = (path, cfg[1], cfg[2], None, None)
+    db = spmm_exec(exec_cfg, m_mat, c.T)
+    _record_vjp("spmm", path, "vjp: dB = (A ⊙ ḡ) @ Cᵀ (sddmm backward is "
+                "spmm)", cfg)
+    dc = spmm_exec(exec_cfg, m_mat.T, b).T
+    _record_vjp("spmm", path, "vjp: dC = ((A ⊙ ḡ)ᵀ @ B)ᵀ (sddmm backward "
+                "is spmm)", cfg)
+    return da, db.astype(b.dtype), dc.astype(c.dtype)
+
+
+sddmm_values.defvjp(_sddmm_fwd, _sddmm_bwd)

@@ -1,0 +1,57 @@
+"""Legacy-surface shim helpers: kwarg coercion + deprecation warnings.
+
+This is the ONE place that interprets the historical ``use_kernel=`` /
+``interpret=`` keyword pattern (previously duplicated across
+core/spmm.py, core/sddmm.py, and dispatch/dispatcher.py): passing either
+kwarg explicitly forces the blocked ("ell") path, because the kwargs
+parameterize that path and requesting them implies it.
+
+``warn_deprecated`` is the single DeprecationWarning emitter for the old
+free-function surface; the message always carries the one-line migration
+hint to ``repro.sparse``.
+
+Deprecation timeline (see DESIGN.md "Public API"):
+
+  * this PR      — ``core.spmm.spmm`` / ``core.sddmm.sddmm`` /
+                   ``dispatch.SparseOperand`` warn and forward.
+  * +2 PRs       — the legacy free functions stop accepting
+                   ``use_kernel=`` / ``interpret=``.
+  * +4 PRs       — the shims are removed; ``repro.sparse`` is the only
+                   public sparse-matmul surface.
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+from repro.dispatch.policy import (PATH_ELL, POLICY_AUTO, POLICY_AUTOTUNE,
+                                   normalize_policy)
+
+_MIGRATION_HINT = ("migrate to repro.sparse: "
+                   "A = SparseMatrix.from_dense(a); A @ h / A.sddmm(b, c)")
+
+
+def warn_deprecated(name: str, hint: str = _MIGRATION_HINT) -> None:
+    """Emit the single DeprecationWarning for a legacy entry point."""
+    warnings.warn(f"{name} is deprecated; {hint}",
+                  DeprecationWarning, stacklevel=3)
+
+
+def coerce_kernel_kwargs(
+    policy: str,
+    use_kernel: Optional[bool],
+    interpret: Optional[bool],
+) -> Tuple[str, Optional[bool], bool, bool]:
+    """Normalize policy and apply the legacy kernel-kwarg rule.
+
+    Returns ``(policy, use_kernel, interpret, kernel_forced)`` where
+    ``kernel_forced`` records whether the caller passed either kwarg
+    explicitly (which forces the blocked path under auto policies, so
+    legacy ``spmm(ell, h, use_kernel=False)`` call sites stay
+    meaningful).
+    """
+    kernel_forced = use_kernel is not None or interpret is not None
+    policy = normalize_policy(policy)
+    if kernel_forced and policy in (POLICY_AUTO, POLICY_AUTOTUNE):
+        policy = PATH_ELL
+    return policy, use_kernel, bool(interpret), kernel_forced

@@ -1,0 +1,239 @@
+"""Planned SpMM / SDDMM front-ends for ``SparseMatrix``.
+
+``matmul`` (what ``A @ H`` calls) and ``sddmm`` (what ``A.sddmm(b, c)``
+/ ``repro.sparse.sample`` call) resolve an execution path through the
+sparsity-adaptive machinery in ``repro.dispatch`` — the analytic cost
+model for ``policy="auto"``, the timed autotune cache for
+``policy="autotune"``, or a forced path — then run the differentiable
+``custom_vjp`` primitives in ``repro.sparse.autodiff``.
+
+Plans are memoized per matrix instance (see ``repro.sparse.plan``):
+the first call for a given (op, width, policy, dtype) plans, every
+later call hits the memo and goes straight to execution.  Planning is
+host logic over static ``MatrixStats`` aux metadata, so it happens at
+``jax.jit`` trace time and is baked into the traced program.
+
+Candidate paths follow the forms a matrix carries: ``ell`` (blocked)
+needs an ``"ell"``/``"coo"`` form, ``csr`` (element) a ``"csr"`` form;
+``dense`` densifies on device and is always available.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dispatch import autotune as autotune_mod
+from repro.dispatch.autotune import AutotuneCache, make_key, measure
+from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
+from repro.dispatch.dispatcher import (Plan, plan_sddmm, plan_spmm,
+                                       record_plan)
+from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
+                                   PATH_CSR, PATH_DENSE, PATH_ELL,
+                                   POLICY_AUTO, POLICY_AUTOTUNE,
+                                   normalize_policy)
+from repro.sparse import autodiff
+from repro.sparse.matrix import SparseMatrix, with_values
+
+
+def _default_use_kernel(config: DispatchConfig) -> bool:
+    if config.use_kernel is not None:
+        return config.use_kernel
+    return jax.default_backend() == "tpu"
+
+
+def _is_traced(*operands) -> bool:
+    return any(isinstance(x, jax.core.Tracer)
+               for x in jax.tree_util.tree_leaves(list(operands)))
+
+
+def available_paths(a: SparseMatrix) -> Tuple[str, ...]:
+    """Execution paths the matrix's carried forms can run."""
+    cand = []
+    if "ell" in a._forms or "coo" in a._forms:
+        cand.append(PATH_ELL)
+    if "csr" in a._forms:
+        cand.append(PATH_CSR)
+    cand.append(PATH_DENSE)  # device densify works for every form
+    return tuple(cand)
+
+
+def _resolve_plan(op: str, a: SparseMatrix, inner_dim: int, ref_dtype,
+                  policy: str, cand: Tuple[str, ...], uk: bool,
+                  interpret: bool, cost_model: CostModel,
+                  config: DispatchConfig,
+                  autotune_cache: Optional[AutotuneCache],
+                  exec_thunk, concrete: bool) -> Plan:
+    key = (op, int(inner_dim), policy, str(ref_dtype), cand, uk, interpret)
+    if policy == POLICY_AUTOTUNE:
+        # a trace-time autotune downgrades to the cost model; keep its
+        # memo separate so it never masks a real (concrete) timing pass
+        key += (concrete,)
+    plan = a._cache.get(key)
+    if plan is not None:
+        return plan
+    if policy in PATHS:
+        if policy not in cand:
+            raise ValueError(
+                f"policy {policy!r} not among available paths {cand}")
+        plan = Plan(op=op, path=policy, policy=policy, reason="forced",
+                    use_kernel=uk, interpret=interpret, stats=a.stats)
+    else:
+        if a.stats is None:
+            raise ValueError(
+                f"{op}: matrix has no sparsity stats; construct it with "
+                "SparseMatrix.from_dense/from_* (concrete) or force a "
+                "path policy")
+        # autotune must never time tracer thunks (it would cache trace-
+        # construction time); any traced operand downgrades to the cost
+        # model, exactly like plan_* does for pure planning
+        if policy == POLICY_AUTOTUNE and concrete:
+            cache = autotune_cache if autotune_cache is not None \
+                else autotune_mod.GLOBAL_CACHE
+            akey = make_key(op, a.stats.shape, inner_dim, ref_dtype,
+                            a.stats.density,
+                            buckets_per_decade=config.buckets_per_decade)
+            hit = cache.get(akey)
+            if hit is None:
+                hit = measure({p: exec_thunk(p) for p in cand},
+                              warmup=config.autotune_warmup,
+                              iters=config.autotune_iters)
+                cache.put(akey, hit)
+                reason = "autotune: measured " + ", ".join(
+                    f"{p}={t:.0f}us"
+                    for p, t in sorted(hit.timings_us.items()))
+            else:
+                reason = "autotune: cached winner"
+            path = hit.path
+            if path not in cand:  # cache shared across operands with
+                finite = {p: t for p, t in hit.timings_us.items()
+                          if p in cand}  # different carried forms
+                path = min(finite, key=finite.get) if finite else cand[0]
+            plan = Plan(op=op, path=path, policy=POLICY_AUTOTUNE,
+                        reason=reason, use_kernel=uk, interpret=interpret,
+                        timings_us=hit.timings_us, stats=a.stats)
+        else:
+            planner = plan_spmm if op == "spmm" else plan_sddmm
+            plan = planner(a.stats, inner_dim, policy=policy,
+                           cost_model=cost_model, config=config,
+                           use_kernel=uk, interpret=interpret,
+                           candidates=cand)
+    a._cache.put(key, plan)
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# SpMM
+# ---------------------------------------------------------------------------
+
+
+def matmul(
+    a: SparseMatrix,
+    h,
+    *,
+    policy: str = POLICY_AUTO,
+    candidates: Optional[Tuple[str, ...]] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    bd: Optional[int] = None,
+    out_dtype=None,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    autotune_cache: Optional[AutotuneCache] = None,
+):
+    """Y = A @ H through the unified sparse front-end (differentiable)."""
+    if not isinstance(a, SparseMatrix):
+        raise TypeError(f"matmul expects a SparseMatrix, got {type(a)}")
+    h = jnp.asarray(h)
+    h_was_1d = h.ndim == 1
+    if h_was_1d:
+        h = h[:, None]
+    if h.ndim != 2:
+        raise ValueError(f"spmm: H must be 1-D or 2-D, got shape {h.shape}")
+    if h.shape[0] != a.shape[1]:
+        raise ValueError(
+            f"spmm: H has {h.shape[0]} rows but A has {a.shape[1]} "
+            f"columns (A shape {a.shape})")
+    policy = normalize_policy(policy)
+    cand = tuple(candidates) if candidates else available_paths(a)
+    uk = use_kernel if use_kernel is not None else _default_use_kernel(config)
+    interpret = bool(interpret)
+    odt = None if out_dtype is None else str(jnp.dtype(out_dtype))
+
+    def exec_thunk(p):
+        return lambda: autodiff.spmm_exec((p, uk, interpret, bd, odt), a, h)
+
+    plan = _resolve_plan("spmm", a, h.shape[1], h.dtype, policy, cand, uk,
+                         interpret, cost_model, config, autotune_cache,
+                         exec_thunk, concrete=not _is_traced(a, h))
+    record_plan(plan)
+    y = autodiff.spmm((plan.path, plan.use_kernel, plan.interpret, bd, odt),
+                      a, h)
+    return y[:, 0] if h_was_1d else y
+
+
+# ---------------------------------------------------------------------------
+# SDDMM
+# ---------------------------------------------------------------------------
+
+
+def sddmm(
+    a: SparseMatrix,
+    b,
+    c,
+    *,
+    policy: str = POLICY_AUTO,
+    candidates: Optional[Tuple[str, ...]] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    bk: Optional[int] = None,
+    out_dtype=None,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    autotune_cache: Optional[AutotuneCache] = None,
+) -> SparseMatrix:
+    """S = A ⊙ (B @ C) at A's stored entries (differentiable).
+
+    Returns a single-form ``SparseMatrix`` sharing A's topology, in the
+    layout of the form the planned path read; ``S.data`` holds the
+    sampled values (element order for the csr path — what GAT's
+    segment-softmax consumes).
+    """
+    if not isinstance(a, SparseMatrix):
+        raise TypeError(f"sddmm expects a SparseMatrix, got {type(a)}")
+    b = jnp.asarray(b)
+    c = jnp.asarray(c)
+    if b.shape[0] != a.shape[0]:
+        raise ValueError(
+            f"sddmm: B has {b.shape[0]} rows but A has {a.shape[0]}")
+    if c.shape[1] != a.shape[1]:
+        raise ValueError(
+            f"sddmm: C has {c.shape[1]} columns but A has {a.shape[1]}")
+    if b.shape[1] != c.shape[0]:
+        raise ValueError(
+            f"sddmm: inner dims disagree: B {b.shape} vs C {c.shape}")
+    policy = normalize_policy(policy)
+    cand = tuple(candidates) if candidates else available_paths(a)
+    uk = use_kernel if use_kernel is not None else _default_use_kernel(config)
+    interpret = bool(interpret)
+    odt = None if out_dtype is None else str(jnp.dtype(out_dtype))
+
+    def exec_thunk(p):
+        return lambda: autodiff.sddmm_values(
+            (p, uk, interpret, bk, odt), a, b, c)
+
+    plan = _resolve_plan("sddmm", a, b.shape[1], b.dtype, policy, cand, uk,
+                         interpret, cost_model, config, autotune_cache,
+                         exec_thunk, concrete=not _is_traced(a, b, c))
+    record_plan(plan)
+    vals = autodiff.sddmm_values(
+        (plan.path, plan.use_kernel, plan.interpret, bk, odt), a, b, c)
+    form_name = autodiff.form_read_by(a, plan.path)
+    return SparseMatrix(
+        {form_name: with_values(form_name, a._forms[form_name], vals)},
+        a.shape, a.stats, cache=a._cache)
+
+
+# the paper's naming for the masked product
+sample = sddmm

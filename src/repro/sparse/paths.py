@@ -1,0 +1,196 @@
+"""Traceable execution paths shared by the unified sparse front-end.
+
+Every path here is pure jnp (or routes to the Pallas kernels), takes
+device arrays, and is safe to call at ``jax.jit`` trace time — planning
+(which path to run) is host logic and lives in ``repro.sparse.ops``; the
+functions below only *execute*.
+
+Path vocabulary matches the dispatch layer (see dispatch/policy.py):
+
+  * ``ell``   — blocked streaming: Block-ELL SpMM / Block-COO SDDMM
+                (Pallas kernel on TPU, jnp reference elsewhere), plus a
+                blocked-COO SpMM used for transposed Block-ELL operands.
+  * ``csr``   — element-granular: gather + segment-sum SpMM, per-edge
+                dot SDDMM.  Exact nnz work, no MXU.
+  * ``dense`` — densify (device scatter) and run the dense matmul /
+                full-product sample.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import CSR, BlockCOO, BlockELL
+
+Array = Any
+
+
+# ---------------------------------------------------------------------------
+# Element-granular ("csr") paths
+# ---------------------------------------------------------------------------
+
+
+def csr_to_device_arrays(csr: CSR) -> Tuple[Array, Array, Array]:
+    """Expand host CSR to (row_ids, col_ids, values) int32 device arrays."""
+    row_ids = np.repeat(
+        np.arange(csr.shape[0], dtype=np.int32), np.diff(csr.indptr)
+    )
+    return (
+        jnp.asarray(row_ids),
+        jnp.asarray(csr.indices.astype(np.int32, copy=False)),
+        jnp.asarray(csr.values),
+    )
+
+
+def spmm_elements(row_ids, col_ids, values, h, num_rows: int):
+    """Y = A @ H via gather + segment-sum (element-granular)."""
+    gathered = values[:, None].astype(jnp.float32) * h[col_ids].astype(
+        jnp.float32
+    )
+    out = jax.ops.segment_sum(gathered, row_ids, num_segments=num_rows)
+    return out.astype(h.dtype)
+
+
+def sddmm_element_dots(row_ids, col_ids, b, c):
+    """out[e] = b[row[e]] . c[:, col[e]] — the per-edge dot products.
+
+    b: [M, K]; c: [K, N] -> dots[e] for each coordinate.
+    """
+    bs = b[row_ids].astype(jnp.float32)  # [nnz, K]
+    cs = c.T[col_ids].astype(jnp.float32)  # [nnz, K]
+    return jnp.sum(bs * cs, axis=-1).astype(b.dtype)
+
+
+def sddmm_elements(row_ids, col_ids, values, b, c):
+    """values ⊙ (B @ C) sampled at the element coordinates."""
+    dots = sddmm_element_dots(row_ids, col_ids, b, c)
+    return (values.astype(jnp.float32)
+            * dots.astype(jnp.float32)).astype(values.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked ("ell") paths
+# ---------------------------------------------------------------------------
+
+
+def spmm_ell(ell: BlockELL, h, *, use_kernel: bool = False,
+             interpret: bool = False, bd: Optional[int] = None,
+             out_dtype=None):
+    """Y = A @ H with A in Block-ELL; H already padded to ell.shape[1]."""
+    from repro.kernels.spmm.ops import spmm_blockell
+
+    return spmm_blockell(ell, h, bd=bd, out_dtype=out_dtype,
+                         use_kernel=use_kernel or interpret,
+                         interpret=interpret)
+
+
+def spmm_coo(coo: BlockCOO, h, *, out_dtype=None):
+    """Y = A @ H with A in Block-COO (scatter-add over nonzero blocks).
+
+    The blocked path for transposed Block-ELL operands: ELL transposes
+    into COO without host re-bucketing, and this scatter is its SpMM.
+    Padded entries carry zero blocks, so duplicate coordinates are
+    harmless under the add.
+    """
+    nnzb, bm, bn = coo.blocks.shape
+    mp, np_ = coo.shape
+    n, d = h.shape
+    h_blocks = h.reshape(np_ // bn, bn, d)
+    prods = jnp.einsum(
+        "emn,end->emd",
+        coo.blocks.astype(jnp.float32),
+        h_blocks[coo.cols].astype(jnp.float32),
+    )
+    out = jnp.zeros((mp // bm, bm, d), jnp.float32).at[coo.rows].add(prods)
+    out_dtype = out_dtype or jnp.result_type(coo.blocks.dtype, h.dtype)
+    return out.reshape(mp, d).astype(out_dtype)
+
+
+def sddmm_blocked(coo: BlockCOO, b, c, *, use_kernel: bool = False,
+                  interpret: bool = False, bk: Optional[int] = None,
+                  out_dtype=None) -> BlockCOO:
+    """coo.blocks ⊙ (B @ C) at the nonzero blocks; B/C already padded."""
+    from repro.kernels.sddmm.ops import sddmm_blockcoo
+
+    return sddmm_blockcoo(coo, b, c, bk=bk, out_dtype=out_dtype,
+                          use_kernel=use_kernel or interpret,
+                          interpret=interpret)
+
+
+def ell_to_coo(ell: BlockELL) -> BlockCOO:
+    """Flatten Block-ELL slots into Block-COO (traceable, no host work).
+
+    Padded slots become zero blocks at duplicated coordinates — exactly
+    the Block-COO padding contract.
+    """
+    nbr, w = ell.indices.shape
+    bm, bn = ell.bm, ell.bn
+    rows = jnp.repeat(jnp.arange(nbr, dtype=jnp.int32), w)
+    cols = ell.indices.reshape(-1).astype(jnp.int32)
+    blocks = ell.blocks.reshape(nbr * w, bm, bn)
+    return BlockCOO(rows=rows, cols=cols, blocks=blocks, shape=ell.shape)
+
+
+def transpose_coo(coo: BlockCOO) -> BlockCOO:
+    """A.T in Block-COO: swap coordinates, transpose each block."""
+    return BlockCOO(
+        rows=coo.cols,
+        cols=coo.rows,
+        blocks=coo.blocks.transpose(0, 2, 1),
+        shape=(coo.shape[1], coo.shape[0]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Densify ("dense") paths — device scatter, trace-safe for every format
+# ---------------------------------------------------------------------------
+
+
+def densify_elements(row_ids, col_ids, values, shape: Tuple[int, int]):
+    m, n = shape
+    return jnp.zeros((m, n), values.dtype).at[row_ids, col_ids].add(values)
+
+
+def densify_ell(ell: BlockELL):
+    nbr, w, bm, bn = ell.blocks.shape
+    nbc = ell.shape[1] // bn
+    out = jnp.zeros((nbr, nbc, bm, bn), ell.blocks.dtype)
+    out = out.at[jnp.arange(nbr)[:, None], ell.indices].add(ell.blocks)
+    return out.transpose(0, 2, 1, 3).reshape(ell.shape)
+
+
+def densify_coo(coo: BlockCOO):
+    bm, bn = coo.bm, coo.bn
+    nbr, nbc = coo.shape[0] // bm, coo.shape[1] // bn
+    out = jnp.zeros((nbr, nbc, bm, bn), coo.blocks.dtype)
+    out = out.at[coo.rows, coo.cols].add(coo.blocks)
+    return out.transpose(0, 2, 1, 3).reshape(coo.shape)
+
+
+def spmm_dense(a_dense, h):
+    """Dense baseline (the paper's Fig. 2 failure mode)."""
+    return a_dense @ h
+
+
+def sample_blocks(full, rows, cols, bm: int, bn: int):
+    """Gather (bm, bn) tiles of a full [M, N] product at block coords."""
+    m, n = full.shape
+    tiles = full.reshape(m // bm, bm, n // bn, bn).transpose(0, 2, 1, 3)
+    return tiles[rows, cols]  # [nnzb, bm, bn]
+
+
+def pad_rows(x, target: int):
+    """Zero-pad x's leading dim up to ``target`` (no-op when equal)."""
+    if x.shape[0] == target:
+        return x
+    return jnp.zeros((target,) + x.shape[1:], x.dtype).at[: x.shape[0]].set(x)
+
+
+def pad_cols(x, target: int):
+    if x.shape[1] == target:
+        return x
+    return jnp.zeros((x.shape[0], target), x.dtype) \
+        .at[:, : x.shape[1]].set(x)

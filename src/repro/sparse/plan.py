@@ -1,0 +1,74 @@
+"""Per-instance plan memoization for ``SparseMatrix``.
+
+A ``SparseMatrix`` carries one ``PlanCache`` in its static (aux) pytree
+metadata.  The first ``A @ H`` for a given (op, width, policy, dtype)
+resolves a dispatch ``Plan`` through the cost model / autotune machinery
+and memoizes it; every later call with the same key skips re-planning.
+
+The cache is deliberately *neutral* for jit purposes: two caches always
+compare equal and hash alike, so the memo never forces a retrace — only
+the matrix's shape/format/stats (the rest of the aux tuple) do.
+
+Module-level hit/miss counters aggregate across all instances so the
+benchmark harness can report plan-cache effectiveness.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Hashable, Optional
+
+
+@dataclasses.dataclass
+class PlanCacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+# Process-global counters (all SparseMatrix instances).
+GLOBAL_STATS = PlanCacheStats()
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    """Aggregate plan-cache counters across every SparseMatrix."""
+    return {"hits": GLOBAL_STATS.hits, "misses": GLOBAL_STATS.misses}
+
+
+def reset_plan_cache_stats() -> None:
+    GLOBAL_STATS.hits = 0
+    GLOBAL_STATS.misses = 0
+
+
+class PlanCache:
+    """Mutable (key -> Plan) memo carried in pytree aux metadata.
+
+    Equality/hash are constant so jit cache keys (which compare aux data)
+    are insensitive to the memo's identity and contents.
+    """
+
+    __slots__ = ("entries",)
+
+    def __init__(self):
+        self.entries: Dict[Hashable, Any] = {}
+
+    def get(self, key: Hashable) -> Optional[Any]:
+        plan = self.entries.get(key)
+        if plan is None:
+            GLOBAL_STATS.misses += 1
+        else:
+            GLOBAL_STATS.hits += 1
+        return plan
+
+    def put(self, key: Hashable, plan: Any) -> None:
+        self.entries[key] = plan
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __eq__(self, other) -> bool:
+        return isinstance(other, PlanCache)
+
+    def __hash__(self) -> int:
+        return 17  # constant; see class docstring
+
+    def __repr__(self) -> str:
+        return f"PlanCache({len(self.entries)} plans)"

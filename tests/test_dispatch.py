@@ -263,11 +263,15 @@ def test_traced_operand_forced_host_policy_raises():
 
 def test_graph_without_stats_raises_clearly():
     from repro.models.gnn import Graph, graph_spmm
+    from repro.sparse import SparseMatrix
 
     rng = np.random.default_rng(43)
     dense = _uniform_sparse(rng, 32, 0.9)
     ell = BlockELL.from_dense(dense, 16, 16)
-    g = Graph(ell=ell, row_ids=None, col_ids=None, values=None, n_nodes=32)
+    # stats-less adjacency (e.g. wrapped from traced arrays): policy
+    # routing must fail loudly, not silently pick a path
+    adj = SparseMatrix({"ell": ell}, ell.shape, None)
+    g = Graph(adj=adj, n_nodes=32)
     with pytest.raises(ValueError, match="build_graph"):
         graph_spmm(g, jnp.ones((32, 4)))
 
