@@ -2,6 +2,7 @@
 from __future__ import annotations
 
 import time
+from typing import Dict, List
 
 import jax
 import numpy as np
@@ -21,5 +22,16 @@ def time_fn(fn, *args, warmup: int = 2, iters: int = 10) -> float:
     return float(np.median(ts) * 1e6)
 
 
+# Rows emitted by the current process, in order — the harness's --json
+# mode serializes these alongside the CSV stream.
+ROWS: List[Dict] = []
+
+
+def reset_rows() -> None:
+    ROWS.clear()
+
+
 def emit(name: str, us: float, derived: str = ""):
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": derived})
     print(f"{name},{us:.1f},{derived}")

@@ -7,13 +7,17 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_spmm         — Fig. 9 (SpMM vs density/N, d=256)
   bench_sddmm        — Fig. 10 (SDDMM vs density, d=2, mnz sensitivity)
   bench_crossover    — Fig. 9's crossover as a dispatch-path sweep
+  bench_serve        — batched-serving throughput/latency sweep (also
+                       writes BENCH_serve.json)
 
-``python -m benchmarks.run [--full] [--policy auto]`` (quick mode by
-default so the CPU container finishes in minutes; --full matches the
-paper's largest sizes; --policy sets the dispatch policy for the
-benches that route through the dispatch layer).
+``python -m benchmarks.run [--full] [--policy auto] [--json out.json]``
+(quick mode by default so the CPU container finishes in minutes; --full
+matches the paper's largest sizes; --policy sets the dispatch policy for
+the benches that route through the dispatch layer; --json additionally
+dumps every emitted row plus the plan-cache counters as JSON).
 """
 import argparse
+import json
 import sys
 
 
@@ -26,11 +30,14 @@ def main() -> None:
                     choices=["auto", "autotune", "ell", "csr", "dense"])
     ap.add_argument("--api", default="sparse", choices=["legacy", "sparse"],
                     help="dispatch surface for the spmm/sddmm benches")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write the emitted rows as JSON to PATH")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_crossover, bench_dense_limit,
-                            bench_footprint, bench_sddmm, bench_spmm)
+                            bench_footprint, bench_sddmm, bench_serve,
+                            bench_spmm, common)
     from repro.sparse import plan_cache_stats, reset_plan_cache_stats
     benches = {
         "dense_limit": bench_dense_limit.run,
@@ -38,11 +45,18 @@ def main() -> None:
         "spmm": bench_spmm.run,
         "sddmm": bench_sddmm.run,
         "crossover": bench_crossover.run,
+        "serve": bench_serve.run,
     }
-    dispatched = {"spmm", "sddmm", "crossover"}
+    dispatched = {"spmm", "sddmm", "crossover", "serve"}
     api_axis = {"spmm", "sddmm"}
     only = set(args.only.split(",")) if args.only else None
+    if only:
+        unknown = only - set(benches)
+        if unknown:
+            ap.error(f"unknown bench name(s) {sorted(unknown)}; "
+                     f"expected among {sorted(benches)}")
     reset_plan_cache_stats()
+    common.reset_rows()
     print("name,us_per_call,derived")
     for name, fn in benches.items():
         if only and name not in only:
@@ -59,6 +73,14 @@ def main() -> None:
     rate = pc["hits"] / emitted if emitted else 0.0
     print(f"plan_cache,{pc['hits']},misses={pc['misses']};"
           f"hit_rate={rate:.3f}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "rows": common.ROWS,
+                "plan_cache": {**pc, "hit_rate": round(rate, 3)},
+            }, f, indent=2)
+        print(f"# wrote {len(common.ROWS)} rows to {args.json}",
+              file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -10,7 +10,9 @@ plan caching, and gradients:
   3. SDDMM via sample(A, B, C) — computed only at A's nonzeros,
   4. gradients: jax.grad through A @ H — SpMM's backward *is* SDDMM
      (and vice versa), the paper's kernels closing the training loop,
-  5. the same SpMM distributed 1.5D over a local mesh.
+  5. the same SpMM distributed 1.5D over a local mesh,
+  6. batched serving: many small graphs composed block-diagonally and
+     served through the shape-bucketed micro-batching engine.
 
 Runs on CPU in seconds:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -85,6 +87,42 @@ def main():
         print(f"only {n_dev} device(s); run with "
               "XLA_FLAGS=--xla_force_host_platform_device_count=8 "
               "to exercise the mesh path")
+
+    print("\n== batched multi-graph serving (block-diag + buckets) ==")
+    from repro.batch import BatchedSparseMatrix
+    from repro.configs.paper_gnn import SMOKE_CONFIG as GCFG
+    from repro.data.pipeline import random_graph
+    from repro.models.gnn import build_graph, init_gcn
+    from repro.serve.engine import BatchServeConfig, BatchServingEngine
+
+    rng = np.random.default_rng(0)
+    graphs = [build_graph(random_graph(nn, avg_degree=4, seed=nn), GCFG)
+              for nn in (48, 80, 33)]
+    # three graphs -> one block-diagonal operand -> ONE planned SpMM
+    B = BatchedSparseMatrix.from_matrices([g.adj for g in graphs])
+    hs = [jnp.asarray(rng.normal(size=(g.n_nodes, d)).astype(np.float32))
+          for g in graphs]
+    ys = B.unbatch(B @ B.batch_features(hs))
+    print(f"{B}: per-graph outputs {[tuple(y.shape) for y in ys]}")
+
+    params = init_gcn(jax.random.PRNGKey(0), GCFG)
+    with BatchServingEngine.for_gcn(
+            params, scfg=BatchServeConfig(max_batch=8,
+                                          max_delay_ms=2.0)) as eng:
+        futs = [eng.submit(graphs[i % 3],
+                           rng.normal(size=(graphs[i % 3].n_nodes,
+                                            GCFG.in_features))
+                           .astype(np.float32))
+                for i in range(16)]
+        logits = [f.result() for f in futs]
+        eng.drain()
+        rep = eng.report()
+    print(f"served {rep['completed']} mixed-shape requests: "
+          f"{rep['req_per_s']:.0f} req/s, "
+          f"p50 {rep['latency_ms_p50']:.1f} ms, "
+          f"compiles {rep['executor']['compiles']} "
+          f"(buckets {rep['executor']['buckets']}), "
+          f"padding waste {rep['executor']['padding']['waste_fraction']:.0%}")
 
 
 if __name__ == "__main__":

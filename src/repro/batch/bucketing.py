@@ -1,0 +1,251 @@
+"""Shape bucketing: quantize variably-shaped graphs onto a compile grid.
+
+Arbitrary serving traffic carries arbitrary (n_nodes, nnz, d) triples;
+jitting one executor per exact shape compiles O(#requests) programs.
+The bucketing compiler quantizes each dimension up onto a geometric grid
+(growth factor ``growth`` per step, floored at the block size), pads the
+graph *into* its bucket, and replaces its measured ``MatrixStats`` with
+the bucket's **canonical stats** — a deterministic function of the
+bucket geometry alone.  Two consequences:
+
+  * every request in a bucket presents the *identical* jit cache key
+    (same shapes, same static aux), so traffic compiles O(#buckets)
+    executors, not O(#requests);
+  * the dispatch path is planned once per bucket from the canonical
+    stats, through the same cost model that plans single matrices.
+
+Padding is the price: the counters in :class:`PaddingWaste` account the
+streamed-but-dead volume (the batch-level analog of the paper's
+padded-stream blow-up) so serving reports can show the tradeoff.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batch.block_diag import pad_ell_width
+from repro.core.formats import BlockELL, _cdiv
+from repro.dispatch.stats import MatrixStats
+from repro.sparse.matrix import SparseMatrix
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketingConfig:
+    """Geometry of the bucket grid."""
+
+    growth: float = 2.0        # geometric step between node-count buckets
+    nnz_growth: float = 4.0    # coarser grid for nnz (correlates with n)
+    min_rows: int = 32         # floor of the node grid
+    min_nnz: int = 64          # floor of the nnz grid
+    min_width: int = 1         # floor of the ELL-width grid
+
+
+DEFAULT_BUCKETING = BucketingConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One cell of the compile grid (hashable; part of executor keys)."""
+
+    rows: int       # padded node rows (multiple of block_m)
+    cols: int       # padded node cols (multiple of block_n)
+    nnz: int        # padded element count (csr form)
+    width: int      # padded ELL width (ell form)
+    block_m: int
+    block_n: int
+
+    @property
+    def n_block_rows(self) -> int:
+        return self.rows // self.block_m
+
+
+def quantize_up(x: int, base: int, growth: float) -> int:
+    """Smallest grid point ``base * growth^k`` (k >= 0) at or above x."""
+    if growth <= 1.0:
+        raise ValueError(
+            f"bucket growth must be > 1 (got {growth}); a growth of 1 "
+            "would bucket per exact shape and compile per request")
+    x = max(int(x), 1)
+    base = max(int(base), 1)
+    if x <= base:
+        return base
+    k = int(np.ceil(np.log(x / base) / np.log(growth)))
+    q = int(round(base * growth ** k))
+    while q < x:  # guard float rounding at the boundary
+        q = int(round(q * growth))
+    return q
+
+
+def _round_to(x: int, mult: int) -> int:
+    return _cdiv(max(int(x), 1), mult) * mult
+
+
+def bucket_for(stats: MatrixStats,
+               config: BucketingConfig = DEFAULT_BUCKETING) -> Bucket:
+    """The bucket a matrix with these measured stats pads into."""
+    bm, bn = stats.block_m, stats.block_n
+    rows = _round_to(
+        quantize_up(stats.shape[0], config.min_rows, config.growth), bm)
+    cols = _round_to(
+        quantize_up(stats.shape[1], config.min_rows, config.growth), bn)
+    nnz = quantize_up(stats.nnz, config.min_nnz, config.nnz_growth)
+    width = quantize_up(max(stats.ell_width, 1), config.min_width,
+                        config.growth)
+    return Bucket(rows=rows, cols=cols, nnz=nnz, width=width,
+                  block_m=bm, block_n=bn)
+
+
+def canonical_stats(bucket: Bucket) -> MatrixStats:
+    """Deterministic stats of a bucket — identical for every request the
+    bucket serves, so jitted executors never retrace on traffic."""
+    nbr = bucket.n_block_rows
+    slots = nbr * bucket.width
+    # expected fraction of slots holding a real block if the bucket's
+    # nnz were spread one-per-block (an upper bound on real occupancy)
+    occ = min(1.0, bucket.nnz / max(slots, 1))
+    return MatrixStats(
+        shape=(bucket.rows, bucket.cols),
+        nnz=bucket.nnz,
+        stored_elements=slots * bucket.block_m * bucket.block_n,
+        block_m=bucket.block_m,
+        block_n=bucket.block_n,
+        n_block_rows=nbr,
+        ell_width=bucket.width,
+        occupancy=occ,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Padding a matrix into its bucket
+# ---------------------------------------------------------------------------
+
+
+def _pad_csr_form(form, bucket: Bucket):
+    r, c, v = form
+    pad = bucket.nnz - r.shape[0]
+    if pad < 0:
+        raise ValueError(
+            f"matrix has nnz={r.shape[0]} > bucket nnz={bucket.nnz}")
+    if pad == 0:
+        return form
+    # dead entries at (0, 0) with value 0: they add exactly zero to any
+    # product and their gradients are masked as structural zeros
+    z = jnp.zeros((pad,), jnp.int32)
+    return (jnp.concatenate([r, z]), jnp.concatenate([c, z]),
+            jnp.concatenate([v, jnp.zeros((pad,), v.dtype)]))
+
+
+def _pad_ell_form(ell: BlockELL, bucket: Bucket) -> BlockELL:
+    if (ell.bm, ell.bn) != (bucket.block_m, bucket.block_n):
+        raise ValueError(
+            f"matrix block {(ell.bm, ell.bn)} != bucket block "
+            f"{(bucket.block_m, bucket.block_n)}")
+    nbr, w = ell.indices.shape
+    if nbr > bucket.n_block_rows or w > bucket.width:
+        raise ValueError(
+            f"matrix ELL geometry ({nbr} rows, width {w}) exceeds bucket "
+            f"({bucket.n_block_rows} rows, width {bucket.width})")
+    idx, blk = pad_ell_width(ell.indices, ell.blocks, bucket.width)
+    nbl = ell.nblocks
+    if nbr < bucket.n_block_rows:
+        pad = bucket.n_block_rows - nbr
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((pad, bucket.width), jnp.int32)], axis=0)
+        blk = jnp.concatenate(
+            [blk, jnp.zeros((pad, bucket.width) + blk.shape[2:],
+                            blk.dtype)], axis=0)
+        nbl = jnp.concatenate([nbl, jnp.zeros((pad,), jnp.int32)])
+    return BlockELL(indices=idx, blocks=blk, nblocks=nbl,
+                    shape=(bucket.rows, bucket.cols))
+
+
+def pad_to_bucket(a: SparseMatrix, bucket: Bucket, *,
+                  form: Optional[str] = None) -> SparseMatrix:
+    """Pad one matrix into its bucket and stamp the canonical stats.
+
+    The result's shape, nnz, ELL geometry, and (crucially) static aux
+    metadata depend only on ``bucket`` — every matrix padded into the
+    same bucket is jit-cache-identical.
+    """
+    form = form or a.format
+    if form == "csr":
+        padded = {"csr": _pad_csr_form(a.form("csr"), bucket)}
+    elif form == "ell":
+        padded = {"ell": _pad_ell_form(a.form("ell"), bucket)}
+    else:
+        raise ValueError(
+            f"cannot bucket-pad form {form!r}; supported: ('ell', 'csr')")
+    return SparseMatrix(padded, (bucket.rows, bucket.cols),
+                        canonical_stats(bucket))
+
+
+def empty_in_bucket(bucket: Bucket, *, form: str,
+                    dtype=jnp.float32) -> SparseMatrix:
+    """An all-zero matrix padded into the bucket (batch-fill dummy)."""
+    if form == "csr":
+        z = jnp.zeros((bucket.nnz,), jnp.int32)
+        padded = {"csr": (z, z, jnp.zeros((bucket.nnz,), dtype))}
+    elif form == "ell":
+        nbr = bucket.n_block_rows
+        padded = {"ell": BlockELL(
+            indices=jnp.zeros((nbr, bucket.width), jnp.int32),
+            blocks=jnp.zeros((nbr, bucket.width, bucket.block_m,
+                              bucket.block_n), dtype),
+            nblocks=jnp.zeros((nbr,), jnp.int32),
+            shape=(bucket.rows, bucket.cols))}
+    else:
+        raise ValueError(
+            f"cannot build an empty {form!r} bucket matrix")
+    return SparseMatrix(padded, (bucket.rows, bucket.cols),
+                        canonical_stats(bucket))
+
+
+# ---------------------------------------------------------------------------
+# Padding-waste accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PaddingWaste:
+    """Streamed-but-dead volume from bucket + batch-fill padding."""
+
+    real_rows: int = 0
+    padded_rows: int = 0
+    real_nnz: int = 0
+    padded_nnz: int = 0
+
+    def add(self, *, real_rows: int, padded_rows: int, real_nnz: int,
+            padded_nnz: int) -> None:
+        self.real_rows += int(real_rows)
+        self.padded_rows += int(padded_rows)
+        self.real_nnz += int(real_nnz)
+        self.padded_nnz += int(padded_nnz)
+
+    @property
+    def row_blowup(self) -> float:
+        return self.padded_rows / max(self.real_rows, 1)
+
+    @property
+    def nnz_blowup(self) -> float:
+        return self.padded_nnz / max(self.real_nnz, 1)
+
+    @property
+    def waste_fraction(self) -> float:
+        """Fraction of streamed elements that are padding."""
+        if self.padded_nnz == 0:
+            return 0.0
+        return 1.0 - self.real_nnz / self.padded_nnz
+
+    def as_dict(self) -> dict:
+        return {
+            "real_rows": self.real_rows,
+            "padded_rows": self.padded_rows,
+            "real_nnz": self.real_nnz,
+            "padded_nnz": self.padded_nnz,
+            "row_blowup": round(self.row_blowup, 4),
+            "nnz_blowup": round(self.nnz_blowup, 4),
+            "waste_fraction": round(self.waste_fraction, 4),
+        }

@@ -100,7 +100,14 @@ def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
             "graph_spmm: Graph adjacency has no sparsity stats; construct "
             "it with build_graph() (or SparseMatrix.from_dense) to use "
             "policy routing")
-    return matmul(graph.adj, h, policy=policy, candidates=GRAPH_PATHS)
+    # restrict candidates to the forms this adjacency actually carries
+    # (a bucketed batch pads only the planned form, not both)
+    cand = tuple(p for p in GRAPH_PATHS
+                 if (p == "csr" and graph.adj.has_form("csr"))
+                 or (p == "ell" and (graph.adj.has_form("ell")
+                                     or graph.adj.has_form("coo"))))
+    return matmul(graph.adj, h, policy=policy,
+                  candidates=cand or GRAPH_PATHS)
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +140,32 @@ def gcn_forward(params, graph: Graph, x, *, use_blockell: bool = True,
         if i < len(params["w"]) - 1:
             h = jax.nn.relu(h)
     return h
+
+
+def batch_graphs(graphs) -> "Any":
+    """Compose many Graphs' adjacencies block-diagonally.
+
+    Returns a :class:`repro.batch.BatchedSparseMatrix`; wrap its
+    ``.matrix`` in a Graph (or call :func:`gcn_forward_batched`) to run
+    the whole batch through one planned aggregation per layer.
+    """
+    from repro.batch import BatchedSparseMatrix
+
+    return BatchedSparseMatrix.from_matrices([g.adj for g in graphs])
+
+
+def gcn_forward_batched(params, batch, hs, *, policy: str = "auto"):
+    """GCN over N graphs at once via the block-diagonal composition.
+
+    GCN weights are node-independent, so ``diag(A_1..A_N) @ (H W)``
+    computes every graph's aggregation in one SpMM per layer.
+    ``hs`` holds per-graph features [n_i, in_features]; returns the
+    per-graph logits list.
+    """
+    h = batch.batch_features(hs)
+    g = Graph(adj=batch.matrix, n_nodes=batch.matrix.shape[0])
+    out = gcn_forward(params, g, h, policy=policy)
+    return batch.unbatch(out)
 
 
 # ---------------------------------------------------------------------------

@@ -10,13 +10,24 @@ graph (the paper's driving app): the SpMM aggregation path is chosen
 once per graph by the sparsity-adaptive dispatch layer and baked into
 the jitted forward, and the engine reports which path serves traffic.
 
+``BatchServingEngine`` serves a *stream* of variably-shaped graphs: a
+bounded request queue feeds a micro-batching worker (flush on max-batch
+or deadline) that groups requests by shape bucket and executes each
+group as one block-diagonal batch through the bucketed compilation
+cache (``repro.batch``) — compiles stay O(#buckets) while the report
+tracks req/s, p50/p99 latency, retraces, and padding waste.
+
 Long-context (500k) decode shards the KV cache over mesh axes via the
 logical-axis rules ("kv_seq"); see launch/dryrun.py shape policies.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+import queue as queue_mod
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -74,6 +85,28 @@ class ServingEngine:
 class GNNServeConfig:
     policy: str = "auto"   # dispatch policy for the aggregation SpMM
     jit: bool = True
+    d: Optional[int] = None  # planning feature width (inferred if None)
+
+
+def _infer_planning_width(params) -> int:
+    """Feature width the SpMM plan prices, from any GNN param layout.
+
+    Prefers the first layer's output projection when the params follow
+    the ``{"w": [...]}`` convention; otherwise falls back to the first
+    2-D leaf in pytree order (the widths only scale every path's cost
+    equally, so any layer's width ranks the paths identically).
+    """
+    ws = params.get("w") if isinstance(params, dict) else None
+    if isinstance(ws, (list, tuple)):
+        ws = ws[0] if ws else None
+    if ws is not None and getattr(ws, "ndim", 0) == 2:
+        return int(np.shape(ws)[1])
+    for leaf in jax.tree_util.tree_leaves(params):
+        if getattr(leaf, "ndim", 0) == 2:
+            return int(np.shape(leaf)[1])
+    raise ValueError(
+        "could not infer a planning feature width from the params "
+        "(no 2-D weight leaf); pass GNNServeConfig(d=...) explicitly")
 
 
 class GNNServingEngine:
@@ -96,9 +129,8 @@ class GNNServingEngine:
             raise ValueError(
                 "GNNServingEngine: Graph adjacency has no sparsity stats; "
                 "construct it with build_graph()")
-        # feature width varies per layer; plan with the first layer's
-        # output width (the widths only scale every path's cost equally)
-        d = int(np.asarray(params["w"][0]).shape[1])
+        d = self.scfg.d if self.scfg.d is not None \
+            else _infer_planning_width(params)
         self.plan = plan_spmm(graph.adj.stats, d, policy=self.scfg.policy,
                               candidates=GRAPH_PATHS)
 
@@ -129,7 +161,264 @@ class GNNServingEngine:
             "occupancy": stats.occupancy,
             "padded_stream_blowup": stats.padded_stream_blowup,
             "n_requests": self.n_requests,
-            "plan_cache": plan_cache_stats(),
+            # the served graph's own plan memo (per-matrix counters):
+            # engines on distinct graphs no longer alias each other's
+            # hit rates; engines sharing one Graph share its memo
+            "plan_cache": self.graph.adj.plan_cache.stats(),
+            "plan_cache_global": plan_cache_stats(),
+        }
+
+
+# ---------------------------------------------------------------------------
+# Batched multi-graph serving (micro-batching over the bucketed executor)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BatchServeConfig:
+    """Micro-batching window and bucketed-executor knobs."""
+
+    max_batch: int = 32        # flush when this many requests are queued
+    max_delay_ms: float = 5.0  # ... or when the oldest waits this long
+    queue_depth: int = 1024    # bounded admission queue
+    policy: str = "auto"       # dispatch policy inside the executor
+    form: str = "auto"         # bucket form: auto | csr | ell
+    max_executors: int = 64    # LRU cap on cached jitted executors
+    growth: float = 2.0        # bucket grid growth factor
+
+
+@dataclasses.dataclass
+class _Request:
+    matrix: Any                # SparseMatrix adjacency
+    features: Any              # [n_nodes, d]
+    future: Future
+    t_submit: float
+
+
+class BatchServingEngine:
+    """Serves a stream of (graph, features) requests with micro-batching.
+
+    Requests enter a bounded queue; a worker thread drains it into
+    micro-batches (flushing on ``max_batch`` or the ``max_delay_ms``
+    deadline), groups each flush by shape bucket, and executes every
+    group as one block-diagonal batch through a
+    :class:`repro.batch.BucketedExecutor` — so arbitrary traffic
+    compiles O(#buckets) programs and the whole batch rides one planned
+    SpMM per model layer.
+
+    ``fn(matrix, h)`` is the per-batch program (default: the planned
+    ``matrix @ h``); with ``context`` set (e.g. model weights) it is
+    called ``fn(context, matrix, h)`` and the context rides through jit
+    as a traced argument shared by every cached executor.  Use
+    :meth:`for_gcn` to serve GCN node classification with shared
+    weights.
+    """
+
+    def __init__(self, fn: Optional[Callable] = None, *,
+                 context: Any = None,
+                 scfg: Optional[BatchServeConfig] = None):
+        from repro.batch import BucketedExecutor
+        from repro.batch.bucketing import BucketingConfig
+
+        self.scfg = scfg or BatchServeConfig()
+        self.executor = BucketedExecutor(
+            fn,
+            context=context,
+            form=self.scfg.form,
+            policy=self.scfg.policy,
+            max_batch=self.scfg.max_batch,
+            max_executors=self.scfg.max_executors,
+            bucketing=BucketingConfig(growth=self.scfg.growth),
+        )
+        self._queue: "queue_mod.Queue[_Request]" = queue_mod.Queue(
+            maxsize=self.scfg.queue_depth)
+        self._latencies_ms: List[float] = []
+        self._flushes = {"full": 0, "deadline": 0}
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._submitted = 0
+        self._completed = 0
+        self._failed = 0
+        self._close_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._worker = threading.Thread(target=self._serve_loop,
+                                        name="batch-serve", daemon=True)
+        self._worker.start()
+
+    @classmethod
+    def for_gcn(cls, params, *, scfg: Optional[BatchServeConfig] = None,
+                ) -> "BatchServingEngine":
+        """Engine running a shared-weight GCN over each batch.
+
+        The block-diagonal composition makes the batched forward exact:
+        weights are node-independent, so ``diag(A_1..A_N) @ (H W)``
+        aggregates every graph at once.
+        """
+        from repro.models.gnn import Graph, gcn_forward
+
+        policy = (scfg or BatchServeConfig()).policy
+
+        def fwd(p, mat, h):
+            g = Graph(adj=mat, n_nodes=mat.shape[0])
+            return gcn_forward(p, g, h, policy=policy)
+
+        # weights enter as the executor context (a jit argument), so the
+        # cached per-bucket executables share one copy instead of each
+        # baking the params in as XLA constants
+        return cls(fwd, context=params, scfg=scfg)
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, matrix, features) -> Future:
+        """Enqueue one request; resolves to [n_nodes, d_out] (numpy).
+
+        ``matrix`` is the graph's (normalized) adjacency as a
+        ``SparseMatrix`` — or a ``Graph``, whose adjacency is taken.
+        Blocks while the admission queue is full (bounded backpressure).
+        """
+        if self._stop.is_set():
+            raise RuntimeError("engine is closed")
+        adj = getattr(matrix, "adj", matrix)
+        req = _Request(matrix=adj, features=features, future=Future(),
+                       t_submit=time.perf_counter())
+        if self._t_first is None:
+            self._t_first = req.t_submit
+        self._submitted += 1
+        self._queue.put(req)
+        if self._stop.is_set():
+            # close() may have drained between our check and the put;
+            # sweep again so no request can strand in a dead queue
+            self._fail_queued()
+        return req.future
+
+    def infer(self, matrix, features) -> np.ndarray:
+        """Synchronous convenience wrapper around :meth:`submit`."""
+        return self.submit(matrix, features).result()
+
+    # -- worker -------------------------------------------------------------
+
+    def _serve_loop(self) -> None:
+        window_s = self.scfg.max_delay_ms / 1e3
+        while not self._stop.is_set():
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue_mod.Empty:
+                continue
+            batch = [first]
+            # the window anchors at the oldest request's *submit* time
+            # (queue wait already spent counts against the deadline);
+            # requests already queued are always taken — the deadline
+            # only bounds how long we *wait* for more
+            deadline = first.t_submit + window_s
+            while len(batch) < self.scfg.max_batch:
+                try:
+                    batch.append(self._queue.get_nowait())
+                    continue
+                except queue_mod.Empty:
+                    pass
+                remaining = deadline - time.perf_counter()
+                if remaining <= 0:
+                    break
+                try:
+                    batch.append(self._queue.get(timeout=remaining))
+                except queue_mod.Empty:
+                    break
+            self._flushes["full" if len(batch) >= self.scfg.max_batch
+                          else "deadline"] += 1
+            self._flush(batch)
+
+    def _flush(self, batch: List[_Request]) -> None:
+        try:
+            outs = self.executor.run([r.matrix for r in batch],
+                                     [r.features for r in batch])
+        except Exception as exc:  # noqa: BLE001 — fail the whole flush
+            self._t_last = time.perf_counter()
+            for r in batch:
+                with self._close_lock:
+                    self._completed += 1  # resolved (with an error):
+                    self._failed += 1     # drain must not wait on these
+                if not r.future.cancelled():
+                    r.future.set_exception(exc)
+            return
+        t_done = time.perf_counter()
+        self._t_last = t_done
+        for r, y in zip(batch, outs):
+            self._latencies_ms.append((t_done - r.t_submit) * 1e3)
+            with self._close_lock:
+                self._completed += 1
+            if not r.future.cancelled():
+                r.future.set_result(y)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Block until everything submitted so far has completed."""
+        t0 = time.perf_counter()
+        while self._completed < self._submitted:
+            if time.perf_counter() - t0 > timeout:
+                raise TimeoutError(
+                    f"drain: {self._submitted - self._completed} requests "
+                    f"still pending after {timeout}s")
+            time.sleep(0.002)
+
+    def reset_metrics(self) -> None:
+        """Zero the traffic counters (e.g. after a warm-up pass).
+
+        Executor state (compiled programs, compile counters) is kept —
+        only latency/throughput accounting restarts.  Call with no work
+        in flight (after :meth:`drain`).
+        """
+        if self._completed < self._submitted:
+            raise RuntimeError("reset_metrics with requests in flight; "
+                               "drain() first")
+        self._latencies_ms.clear()
+        self._flushes = {"full": 0, "deadline": 0}
+        self._t_first = self._t_last = None
+        self._submitted = self._completed = self._failed = 0
+
+    def _fail_queued(self) -> None:
+        """Fail everything still queued so no future blocks forever."""
+        while True:
+            try:
+                req = self._queue.get_nowait()
+            except queue_mod.Empty:
+                return
+            with self._close_lock:
+                self._completed += 1
+                self._failed += 1
+            if not req.future.cancelled():
+                req.future.set_exception(RuntimeError("engine closed"))
+
+    def close(self) -> None:
+        self._stop.set()
+        self._worker.join(timeout=5.0)
+        self._fail_queued()
+
+    def __enter__(self) -> "BatchServingEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        """Throughput, latency percentiles, compile + padding counters."""
+        lat = np.asarray(self._latencies_ms, np.float64)
+        elapsed = ((self._t_last - self._t_first)
+                   if (self._t_first is not None
+                       and self._t_last is not None) else 0.0)
+        return {
+            "submitted": self._submitted,
+            "completed": self._completed,
+            "failed": self._failed,
+            "req_per_s": (self._completed / elapsed) if elapsed > 0 else 0.0,
+            "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat)
+            else 0.0,
+            "latency_ms_p99": float(np.percentile(lat, 99)) if len(lat)
+            else 0.0,
+            "flushes": dict(self._flushes),
+            "executor": self.executor.report(),
         }
 
 

@@ -280,6 +280,12 @@ class SparseMatrix:
         return 2
 
     @property
+    def plan_cache(self) -> PlanCache:
+        """This instance's plan memo (carries per-matrix hit/miss
+        counters; see ``PlanCache.stats``)."""
+        return self._cache
+
+    @property
     def data(self) -> Array:
         """Differentiable values leaf of the primary form."""
         return values_of(self.format, self._forms[self.format])

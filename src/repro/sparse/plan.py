@@ -9,8 +9,10 @@ The cache is deliberately *neutral* for jit purposes: two caches always
 compare equal and hash alike, so the memo never forces a retrace — only
 the matrix's shape/format/stats (the rest of the aux tuple) do.
 
-Module-level hit/miss counters aggregate across all instances so the
-benchmark harness can report plan-cache effectiveness.
+Each cache also keeps its own hit/miss counters, so per-engine reports
+(two serving engines in one process) never alias each other; the
+module-level counters aggregate across all instances for the benchmark
+harness.
 """
 from __future__ import annotations
 
@@ -45,21 +47,31 @@ class PlanCache:
     are insensitive to the memo's identity and contents.
     """
 
-    __slots__ = ("entries",)
+    __slots__ = ("entries", "hits", "misses")
 
     def __init__(self):
         self.entries: Dict[Hashable, Any] = {}
+        self.hits = 0
+        self.misses = 0
 
     def get(self, key: Hashable) -> Optional[Any]:
         plan = self.entries.get(key)
         if plan is None:
+            self.misses += 1
             GLOBAL_STATS.misses += 1
         else:
+            self.hits += 1
             GLOBAL_STATS.hits += 1
         return plan
 
     def put(self, key: Hashable, plan: Any) -> None:
         self.entries[key] = plan
+
+    def stats(self) -> Dict[str, int]:
+        """This instance's counters (see ``plan_cache_stats`` for the
+        process-wide aggregate)."""
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self.entries)}
 
     def __len__(self) -> int:
         return len(self.entries)

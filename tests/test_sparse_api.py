@@ -236,6 +236,61 @@ def test_plan_cache_shared_through_with_data(operands, h):
     assert stats1["hits"] == stats0["hits"] + 1
 
 
+def test_plan_cache_per_instance_counters(operands, h):
+    A = SparseMatrix.from_dense(operands[0.9], format="csr")
+    B = SparseMatrix.from_dense(operands[0.5], format="csr")
+    A @ h
+    for _ in range(3):
+        A @ h
+    sa = A.plan_cache.stats()
+    assert sa["misses"] == 1 and sa["hits"] == 3 and sa["entries"] == 1
+    # another instance's traffic never moves this instance's counters
+    B @ h
+    assert A.plan_cache.stats() == sa
+    assert B.plan_cache.stats()["misses"] == 1
+
+
+# ---------------------------------------------------------------------------
+# densified-form memo: weakref eviction
+# ---------------------------------------------------------------------------
+
+
+def test_dense_memo_entry_dies_with_values_array(operands, h):
+    import gc
+
+    from repro.sparse import matrix as matrix_mod
+
+    A = SparseMatrix.from_dense(operands[0.9], format="csr")
+    key = id(A.data)
+    d1 = A.densify()
+    assert key in matrix_mod._DENSE_MEMO
+    assert A.densify() is d1, "second densify must hit the memo"
+    del A, d1
+    gc.collect()
+    assert key not in matrix_mod._DENSE_MEMO, \
+        "memo entry must die with its values array"
+
+
+def test_dense_memo_no_growth_across_build_drop_cycles(operands, h):
+    import gc
+
+    from repro.sparse import matrix as matrix_mod
+
+    gc.collect()
+    base = len(matrix_mod._DENSE_MEMO)
+    for fmt in ("csr", "ell", "coo"):
+        for _ in range(4):
+            A = SparseMatrix.from_dense(operands[0.9], format=fmt,
+                                        block=BLOCK)
+            np.testing.assert_allclose(
+                np.asarray(A.densify() @ h),
+                operands[0.9] @ np.asarray(h), rtol=2e-4, atol=2e-4)
+            del A
+            gc.collect()
+    assert len(matrix_mod._DENSE_MEMO) == base, \
+        "repeated from_dense/densify/drop cycles must not grow the memo"
+
+
 # ---------------------------------------------------------------------------
 # gradients: the kernels are each other's backward
 # ---------------------------------------------------------------------------
