@@ -5,16 +5,19 @@ Sweeps sparsity from 0.5 to 0.999 and, per point, reports
   * the analytic cost model's numbers and chosen path,
   * measured wall-times of every path on this CPU,
   * the measured winner (the empirical crossover),
+  * the SELL-C-σ speedup over the best other non-dense path (the
+    quantified "cliff kill": past 99 % sparsity the Block-ELL padded
+    stream and the csr scatter both degrade; sell's width-adaptive
+    tile-pruned packing does neither),
 
 as a JSON document with per-point chosen-path labels — the executable
 form of the paper's Fig. 9 observation that the Block-ELL/SELLPACK-style
-streaming design wins at moderate sparsity and degrades past ~99% until
-the scalar CSR path is faster.
+streaming design wins at moderate sparsity and degrades past ~99%.
 
 Usage:
   PYTHONPATH=src:. python -m benchmarks.bench_crossover --sweep
-  ... --policy {auto,autotune,ell,csr,dense}  (dispatch policy to label)
-  ... --out crossover.json                    (default: stdout)
+  ... --policy {auto,autotune,ell,sell,csr,dense}  (policy to label)
+  ... --out crossover.json                         (default: stdout)
 """
 from __future__ import annotations
 
@@ -46,7 +49,7 @@ def sweep(n: int = 1024, d: int = 64, *, policy: str = "auto",
         mask = rng.random((n, n)) < (1.0 - s)
         dense = np.where(mask, rng.normal(size=(n, n)), 0.0) \
             .astype(np.float32)
-        op = SparseMatrix.from_dense(dense, formats=("ell", "csr"),
+        op = SparseMatrix.from_dense(dense, formats=("ell", "csr", "sell"),
                                      block=(BLOCK, BLOCK))
         stats = op.stats
 
@@ -59,13 +62,16 @@ def sweep(n: int = 1024, d: int = 64, *, policy: str = "auto",
         import jax
 
         from repro.kernels.spmm.ref import spmm_blockell_ref
-        from repro.sparse.paths import spmm_dense, spmm_elements
+        from repro.sparse.paths import (spmm_dense, spmm_elements,
+                                        spmm_sell_ref)
 
         row_ids, col_ids, values = op.form("csr")
-        iters = 3 if quick else 5
+        iters = 5 if quick else 9
         times = {
             "ell": time_fn(jax.jit(spmm_blockell_ref), op.form("ell"), h,
                            warmup=2, iters=iters),
+            "sell": time_fn(jax.jit(spmm_sell_ref), op.form("sell"), h,
+                            warmup=2, iters=iters),
             "csr": time_fn(
                 jax.jit(lambda r, c, v, hh: spmm_elements(r, c, v, hh, n)),
                 row_ids, col_ids, values, h, warmup=2, iters=iters),
@@ -73,6 +79,7 @@ def sweep(n: int = 1024, d: int = 64, *, policy: str = "auto",
                              warmup=2, iters=iters),
         }
         measured = min(times, key=times.get)
+        best_other = min(times["ell"], times["csr"])
 
         points.append({
             "sparsity": s,
@@ -80,11 +87,14 @@ def sweep(n: int = 1024, d: int = 64, *, policy: str = "auto",
             "nnz": stats.nnz,
             "occupancy": stats.occupancy,
             "padded_stream_blowup": stats.padded_stream_blowup,
+            "sell_slot_blowup": stats.sell_stored_elements
+            / max(stats.nnz, 1),
             "chosen": plan.path,
             "policy": plan.policy,
             "costs": plan.costs,
             "times_us": times,
             "measured_winner": measured,
+            "sell_speedup_vs_best_other": best_other / times["sell"],
         })
     return {
         "op": "spmm",
@@ -103,8 +113,13 @@ def run(quick: bool = True, policy: str = "auto"):
     for pt in result["points"]:
         for path, us in pt["times_us"].items():
             mark = "*" if path == pt["chosen"] else ""
+            derived = (f"chosen={pt['chosen']};"
+                       f"winner={pt['measured_winner']}")
+            if path == "sell":
+                derived += (";speedup_vs_best_other="
+                            f"{pt['sell_speedup_vs_best_other']:.2f}")
             print(f"crossover_s{pt['sparsity']:g}_{path}{mark},{us:.1f},"
-                  f"chosen={pt['chosen']};winner={pt['measured_winner']}")
+                  f"{derived}")
 
 
 def main() -> None:
@@ -112,7 +127,8 @@ def main() -> None:
     ap.add_argument("--sweep", action="store_true",
                     help="emit the JSON crossover curve")
     ap.add_argument("--policy", default="auto",
-                    choices=["auto", "autotune", "ell", "csr", "dense"])
+                    choices=["auto", "autotune", "ell", "sell", "csr",
+                             "dense"])
     ap.add_argument("--n", type=int, default=1024)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--quick", action="store_true")

@@ -48,10 +48,13 @@ def run(quick: bool = True, policy: str = "auto", api: str = "sparse"):
     from repro.sparse import SparseMatrix, matmul
 
     ns = [2048, 4096] if quick else [2048, 4096, 8192, 16384]
-    densities = [1e-3, 1e-2, 1e-1]
+    # sparsities 0.999 / 0.99 / 0.9 / 0.5 — the BENCH_kernels.json axis
+    densities = [1e-3, 1e-2, 1e-1, 0.5]
     for n in ns:
         h = random_sparse_dense(n, 1.0, seed=7, m=n)[:, :D].copy()
         for density in densities:
+            if density >= 0.5 and n > 2048 and quick:
+                continue  # near-dense points stay small in quick mode
             dense = random_sparse_dense(n, density, seed=13)
             csr = sp.csr_matrix(dense)
             ell = BlockELL.from_dense(dense, bm=64, bn=64)
@@ -68,6 +71,17 @@ def run(quick: bool = True, policy: str = "auto", api: str = "sparse"):
             emit(f"spmm_n{n}_d{density:g}_blockell_cpu", t_ell,
                  f"speedup_vs_csr={t_csr / t_ell:.2f};"
                  f"occupancy={ell.occupancy():.3f}")
+            if density <= 1e-2:
+                # the hyper-sparse regime the SELL-C-σ path targets
+                from repro.core.formats import SellCS
+                from repro.sparse.paths import spmm_sell_ref
+
+                sell = SellCS.from_dense(dense, block=(64, 64))
+                t_sell = time_fn(jax.jit(spmm_sell_ref), sell, jh,
+                                 warmup=2, iters=5)
+                emit(f"spmm_n{n}_d{density:g}_sell_cpu", t_sell,
+                     f"speedup_vs_blockell={t_ell / t_sell:.2f};"
+                     f"slots={sell.n_slots}")
             emit(f"spmm_n{n}_d{density:g}_dense_cpu", t_dense,
                  f"speedup_vs_dense={t_dense / t_ell:.2f}")
             emit(f"spmm_n{n}_d{density:g}_blockell_tpu_projected",
@@ -99,7 +113,8 @@ if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--policy", default="auto",
-                    choices=["auto", "autotune", "ell", "csr", "dense"])
+                    choices=["auto", "autotune", "ell", "sell", "csr",
+                             "dense"])
     ap.add_argument("--api", default="sparse", choices=["legacy", "sparse"],
                     help="dispatch surface: legacy free functions or the "
                          "unified SparseMatrix front-end")

@@ -15,10 +15,17 @@ Prints ``name,us_per_call,derived`` CSV rows.
 matches the paper's largest sizes; --policy sets the dispatch policy for
 the benches that route through the dispatch layer; --json additionally
 dumps every emitted row plus the plan-cache counters as JSON).
+
+When both kernel benches (spmm + sddmm) run with ``--json``, their rows
+are additionally written to ``BENCH_kernels.json`` — the committed
+kernel-performance baseline future PRs regress against (the CI
+bench-smoke job refreshes it as an artifact every push).
 """
 import argparse
 import json
 import sys
+
+KERNELS_BASELINE = "BENCH_kernels.json"
 
 
 def main() -> None:
@@ -27,7 +34,8 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma-separated bench names")
     ap.add_argument("--policy", default="auto",
-                    choices=["auto", "autotune", "ell", "csr", "dense"])
+                    choices=["auto", "autotune", "ell", "sell", "csr",
+                             "dense"])
     ap.add_argument("--api", default="sparse", choices=["legacy", "sparse"],
                     help="dispatch surface for the spmm/sddmm benches")
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -81,6 +89,20 @@ def main() -> None:
             }, f, indent=2)
         print(f"# wrote {len(common.ROWS)} rows to {args.json}",
               file=sys.stderr)
+        ran = set(benches) if only is None else only
+        if {"spmm", "sddmm"} <= ran:
+            kernel_rows = [r for r in common.ROWS
+                           if r["name"].startswith(("spmm_", "sddmm_"))]
+            with open(KERNELS_BASELINE, "w") as f:
+                json.dump({
+                    "quick": quick,
+                    "policy": args.policy,
+                    "api": args.api,
+                    "rows": kernel_rows,
+                }, f, indent=2)
+                f.write("\n")
+            print(f"# wrote {len(kernel_rows)} kernel rows to "
+                  f"{KERNELS_BASELINE}", file=sys.stderr)
 
 
 if __name__ == "__main__":

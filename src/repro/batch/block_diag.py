@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BlockELL
+from repro.core.formats import BlockELL, SellCS
 from repro.dispatch.stats import MatrixStats
 from repro.sparse import paths
 from repro.sparse.matrix import FORMATS, SparseMatrix
@@ -60,6 +60,9 @@ class Segment:
     nnz: int
     block_rows: int
     ell_width: int
+    # slot count of the graph's sell form (-1 = not carried): drives the
+    # per-graph split of sell values in ``unbatch_values``
+    sell_slots: int = -1
 
 
 def _padded_shape(a: SparseMatrix) -> Tuple[int, int]:
@@ -71,7 +74,7 @@ def _padded_shape(a: SparseMatrix) -> Tuple[int, int]:
 def _common_formats(mats: Sequence[SparseMatrix]) -> Tuple[str, ...]:
     common = [f for f in FORMATS
               if all(m.has_form(f) for m in mats)]
-    return tuple(f for f in ("ell", "csr") if f in common)
+    return tuple(f for f in ("ell", "sell", "csr") if f in common)
 
 
 def _concat_csr(mats: Sequence[SparseMatrix],
@@ -127,6 +130,92 @@ def _concat_ell(mats: Sequence[SparseMatrix],
                     shape=shape)
 
 
+def _concat_sell(mats: Sequence[SparseMatrix],
+                 segments: Sequence[Segment],
+                 shape: Tuple[int, int]) -> SellCS:
+    """Block-diagonal SELL-C-σ composition — pure index arithmetic.
+
+    Each graph keeps its own slice packing (σ-window sorting stays
+    per-graph, a valid SELL-C-σ with the graph as the window); slot and
+    tile descriptors are concatenated with row/column/slot offsets and
+    every sentinel is remapped to the composed sentinel.  No repacking,
+    no host transfer of values.
+    """
+    sells = [m.form("sell") for m in mats]
+    blocks = {(s.bm, s.bn) for s in sells}
+    if len(blocks) != 1:
+        raise ValueError(
+            f"block-diagonal sell needs one tile size, got {sorted(blocks)}")
+    (bm, bn) = blocks.pop()
+    for seg in segments:
+        if seg.col_start % bn:
+            raise ValueError(
+                f"column offset {seg.col_start} not aligned to bn={bn}")
+    n_slots_total = sum(s.n_slots for s in sells)
+    n_packed_total = sum(s.n_packed_rows for s in sells)
+    n_live_total = sum(s.n_live_block_rows for s in sells)
+    n_cells_total = sum(s.n_tiles for s in sells) * bm * bn
+    m_total, _ = shape
+
+    buckets = []
+    slot_cols, slot_rows, slot_vals, perms = [], [], [], []
+    tile_rows, tile_cols, tile_maps, slot_pos = [], [], [], []
+    out_gather = jnp.full((m_total,), n_packed_total, jnp.int32)
+    tile_out_gather = jnp.full((m_total,), n_live_total * bm, jnp.int32)
+    row_off = slot_off = live_off = cell_off = 0
+    for s, seg in zip(sells, segments):
+        m_g = s.shape[0]
+        for b_off, b_rows, b_width in s.buckets:
+            buckets.append((b_off + row_off, b_rows, b_width))
+        slot_cols.append(s.slot_cols + jnp.int32(seg.col_start))
+        slot_rows.append(s.slot_rows + jnp.int32(seg.row_start))
+        slot_vals.append(s.slot_vals)
+        perms.append(jnp.where(s.perm == m_g, jnp.int32(m_total),
+                               s.perm + jnp.int32(seg.row_start)))
+        tile_rows.append(s.tile_rows + jnp.int32(live_off))
+        tile_cols.append(s.tile_cols + jnp.int32(seg.col_start // bn))
+        tile_maps.append(jnp.where(
+            s.tile_slot_map == s.n_slots, jnp.int32(n_slots_total),
+            s.tile_slot_map + jnp.int32(slot_off)))
+        slot_pos.append(jnp.where(
+            s.slot_tile_pos == s.n_tiles * bm * bn,
+            jnp.int32(n_cells_total),
+            s.slot_tile_pos + jnp.int32(cell_off)))
+        og = jnp.where(s.out_gather == s.n_packed_rows,
+                       jnp.int32(n_packed_total),
+                       s.out_gather + jnp.int32(row_off))
+        out_gather = out_gather.at[
+            seg.row_start:seg.row_start + m_g].set(og)
+        tog = jnp.where(s.tile_out_gather == s.n_live_block_rows * bm,
+                        jnp.int32(n_live_total * bm),
+                        s.tile_out_gather + jnp.int32(live_off * bm))
+        tile_out_gather = tile_out_gather.at[
+            seg.row_start:seg.row_start + m_g].set(tog)
+        row_off += s.n_packed_rows
+        slot_off += s.n_slots
+        live_off += s.n_live_block_rows
+        cell_off += s.n_tiles * bm * bn
+
+    return SellCS(
+        slot_cols=jnp.concatenate(slot_cols),
+        slot_rows=jnp.concatenate(slot_rows),
+        slot_vals=jnp.concatenate(slot_vals),
+        out_gather=out_gather,
+        perm=jnp.concatenate(perms),
+        tile_rows=jnp.concatenate(tile_rows),
+        tile_cols=jnp.concatenate(tile_cols),
+        tile_slot_map=jnp.concatenate(tile_maps, axis=0),
+        slot_tile_pos=jnp.concatenate(slot_pos),
+        tile_out_gather=tile_out_gather,
+        shape=shape,
+        c=sells[0].c,
+        sigma=sells[0].sigma,
+        buckets=tuple(buckets),
+        block=(bm, bn),
+        n_live_block_rows=n_live_total,
+    )
+
+
 def _combined_stats(mats: Sequence[SparseMatrix],
                     shape: Tuple[int, int]) -> Optional[MatrixStats]:
     stats = [m.stats for m in mats]
@@ -141,6 +230,9 @@ def _combined_stats(mats: Sequence[SparseMatrix],
     # block-diag concatenation adds no padding beyond width alignment)
     occ = sum(s.occupancy * s.n_block_rows * max(s.ell_width, 1)
               for s in stats) / max(nbr * max(width, 1), 1)
+    # sell slots concatenate exactly; unknown in any part poisons the sum
+    sell_known = all(s.sell_stored_elements > 0 or s.nnz == 0
+                     for s in stats)
     return MatrixStats(
         shape=shape,
         nnz=sum(s.nnz for s in stats),
@@ -150,6 +242,8 @@ def _combined_stats(mats: Sequence[SparseMatrix],
         n_block_rows=nbr,
         ell_width=width,
         occupancy=occ,
+        sell_stored_elements=(sum(s.sell_stored_elements for s in stats)
+                              if sell_known else 0),
     )
 
 
@@ -221,6 +315,8 @@ class BatchedSparseMatrix:
                 block_rows=s.n_block_rows if s is not None else -1,
                 ell_width=(m.form("ell").ell_width
                            if m.has_form("ell") else 0),
+                sell_slots=(m.form("sell").n_slots
+                            if m.has_form("sell") else -1),
             ))
             r0 += mp
             c0 += np_
@@ -231,10 +327,12 @@ class BatchedSparseMatrix:
                 forms["csr"] = _concat_csr(mats, segments)
             elif f == "ell":
                 forms["ell"] = _concat_ell(mats, segments, shape)
+            elif f == "sell":
+                forms["sell"] = _concat_sell(mats, segments, shape)
             else:
                 raise ValueError(
                     f"cannot compose {f!r} block-diagonally; supported "
-                    "forms: ('ell', 'csr')")
+                    "forms: ('ell', 'sell', 'csr')")
         matrix = SparseMatrix(forms, shape, _combined_stats(mats, shape))
         return cls(matrix, tuple(segments))
 
@@ -327,6 +425,15 @@ class BatchedSparseMatrix:
                            else blk)
                 row += seg.block_rows
             return out
+        if form == "sell":
+            if any(seg.sell_slots < 0 for seg in self.segments):
+                raise ValueError(
+                    "cannot split sell values: a graph was composed "
+                    "without a sell form (unknown slot count)")
+            offs = np.cumsum([0] + [seg.sell_slots
+                                    for seg in self.segments])
+            return [vals[offs[i]:offs[i + 1]]
+                    for i in range(self.n_graphs)]
         raise ValueError(f"cannot split values of form {form!r}")
 
     # -- batched operators --------------------------------------------------

@@ -18,7 +18,7 @@ streaming-footprint accounting (Fig. 8 reproduction) starts from.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -301,6 +301,322 @@ class BlockCOO:
         # Padded duplicates carry zero blocks; += keeps them harmless.
         np.add.at(out, (rows, cols), blocks)
         return out.transpose(0, 2, 1, 3).reshape(self.shape)
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-σ (tile-pruned, row-sorted packing for the hyper-sparse regime)
+# ---------------------------------------------------------------------------
+
+# Defaults shared by the packer and the stats layer (they must agree so
+# the cost model prices exactly the layout the packer would build).
+SELL_C = 8          # slice height (rows per width-adaptive slice)
+SELL_SIGMA = 0      # sort-window size in rows; 0 = sort the whole matrix
+
+# Geometric width ladder (~1.5x growth): slice widths round *up* onto it,
+# so padding is bounded (<= 50 %, typically ~10 %) while the number of
+# distinct widths — and hence jnp reference buckets — stays O(log nnz).
+def _width_ladder(upto: int) -> np.ndarray:
+    vals = [1]
+    while vals[-1] < upto:
+        q = vals[-1]
+        vals.append(q + 1 if q < 2 else q * 3 // 2)
+    return np.array(vals, dtype=np.int64)
+
+
+def _quantize_width(w: int) -> int:
+    if w <= 0:
+        return 0
+    return int(_width_ladder(w)[-1])
+
+
+def _sell_row_order(row_nnz: np.ndarray, c: int, sigma: int
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """(row order, quantized slice widths) of the SELL-C-σ packing.
+
+    Rows are sorted by nnz (descending, stable) within ``sigma``-row
+    windows, grouped into slices of ``c`` rows, and each slice's width is
+    the quantized max nnz of its rows.  Pure function of the per-row
+    nonzero counts — `MatrixStats` uses it to price the layout without
+    packing anything, so it runs on every stats construction and stays
+    vectorized.
+    """
+    m = len(row_nnz)
+    mp = _cdiv(max(m, 1), c) * c
+    padded = np.zeros(mp, dtype=np.int64)
+    padded[:m] = row_nnz
+    sigma = sigma if sigma and sigma > 0 else mp
+    order = np.concatenate([
+        w0 + np.argsort(-padded[w0:w0 + sigma], kind="stable")
+        for w0 in range(0, mp, sigma)
+    ]) if mp else np.zeros(0, np.int64)
+    slice_max = padded[order].reshape(-1, c).max(axis=1) if mp \
+        else np.zeros(0, np.int64)
+    ladder = _width_ladder(int(slice_max.max()) if len(slice_max) else 1)
+    widths = np.where(
+        slice_max > 0,
+        ladder[np.searchsorted(ladder, slice_max, side="left")
+               .clip(max=len(ladder) - 1)],
+        0)
+    return order, widths
+
+
+def sell_slot_volume(row_nnz: np.ndarray, c: int = SELL_C,
+                     sigma: int = SELL_SIGMA) -> int:
+    """Padded slot count of the SELL-C-σ packing (empty slices pruned).
+
+    This is the `stored_elements` analog for the sell path: the exact
+    number of (col, value) slots the packed layout streams.
+    """
+    _, widths = _sell_row_order(np.asarray(row_nnz), c, sigma)
+    return int(widths.sum()) * c
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class SellCS:
+    """SELL-C-σ sparse matrix with a tile-pruned block companion view.
+
+    Two synchronized views of the same nonzeros:
+
+    **Slot view** (element-granular, the differentiable storage): rows
+    sorted by nnz within σ-windows, grouped into slices of C rows, each
+    slice padded to its own quantized width — never to a global max, so
+    the hyper-sparsity padding cliff of Block-ELL cannot happen.  Slices
+    whose width is 0 (all-empty rows) are dropped entirely.  Same-width
+    slices are stored contiguously (``buckets``), so the jnp reference
+    runs one scatter-free batched contraction per width bucket.
+
+    * ``slot_cols``/``slot_rows``: int32[n_slots] original coordinates
+      per slot (padding slots repeat the row's first column and carry
+      zero values).
+    * ``slot_vals``: dtype[n_slots] — THE values leaf; gradients flow
+      here, padding slots are structural zeros.
+    * ``out_gather``: int32[M] original row -> packed row (``n_packed``
+      for rows in pruned slices; the consumer appends a zero row).
+
+    **Tile view** (block-granular, what the Pallas kernels iterate):
+    the packed row axis is tiled into (bm x bn) blocks and only live
+    (non-empty) tiles are kept, ordered block-row-major.  Block-rows
+    with no live tile are never launched — the explicit non-empty-tile
+    map of the kernel grid.
+
+    * ``perm``: int32[n_live*bm] live packed row -> original row (M for
+      padding rows) — the row gather SDDMM applies to B.
+    * ``tile_rows``/``tile_cols``: int32[T] live-tile coordinates
+      (compacted block-row, original block-column).
+    * ``tile_slot_map``: int32[T, bm, bn] tile cell -> slot id
+      (``n_slots`` for dead cells) — tile data is gathered from
+      ``slot_vals`` so the values live exactly once.
+    * ``slot_tile_pos``: int32[n_slots] slot -> flat tile-cell position
+      (``T*bm*bn`` for padding slots) — how SDDMM tile output folds
+      back into slot order.
+    * ``tile_out_gather``: int32[M] original row -> row of the compact
+      kernel output (``n_live*bm`` for pruned rows).
+
+    Static aux: logical ``shape``, slice height ``c``, sort window
+    ``sigma`` (0 = whole matrix), ``buckets`` — a tuple of
+    ``(row_offset, n_rows, width)`` per width bucket in storage order —
+    the tile ``block`` and the live block-row count.
+    """
+
+    slot_cols: Array
+    slot_rows: Array
+    slot_vals: Array
+    out_gather: Array
+    perm: Array
+    tile_rows: Array
+    tile_cols: Array
+    tile_slot_map: Array
+    slot_tile_pos: Array
+    tile_out_gather: Array
+    shape: Tuple[int, int]
+    c: int
+    sigma: int
+    buckets: Tuple[Tuple[int, int, int], ...]
+    block: Tuple[int, int]
+    n_live_block_rows: int
+
+    _CHILDREN = ("slot_cols", "slot_rows", "slot_vals", "out_gather",
+                 "perm", "tile_rows", "tile_cols", "tile_slot_map",
+                 "slot_tile_pos", "tile_out_gather")
+
+    # -- pytree plumbing ----------------------------------------------------
+    def tree_flatten(self):
+        children = tuple(getattr(self, f) for f in self._CHILDREN)
+        aux = (self.shape, self.c, self.sigma, self.buckets, self.block,
+               self.n_live_block_rows)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        shape, c, sigma, buckets, block, n_live = aux
+        return cls(*children, shape=shape, c=c, sigma=sigma,
+                   buckets=buckets, block=block, n_live_block_rows=n_live)
+
+    # -- derived metadata ---------------------------------------------------
+    @property
+    def bm(self) -> int:
+        return self.block[0]
+
+    @property
+    def bn(self) -> int:
+        return self.block[1]
+
+    @property
+    def n_slots(self) -> int:
+        return sum(r * w for _, r, w in self.buckets)
+
+    @property
+    def n_packed_rows(self) -> int:
+        return sum(r for _, r, _ in self.buckets)
+
+    @property
+    def n_tiles(self) -> int:
+        return int(self.tile_rows.shape[0])
+
+    @property
+    def dtype(self):
+        return self.slot_vals.dtype
+
+    def nbytes(self) -> int:
+        return sum(int(np.prod(np.shape(getattr(self, f))))
+                   * np.dtype(getattr(self, f).dtype).itemsize
+                   for f in self._CHILDREN)
+
+    def stream_elements(self) -> int:
+        """Slots the packed layout streams (the sell `stored_elements`)."""
+        return self.n_slots
+
+    # -- conversions ---------------------------------------------------------
+    @staticmethod
+    def from_dense(dense: np.ndarray, *, c: int = SELL_C,
+                   sigma: int = SELL_SIGMA,
+                   block: Tuple[int, int] = (64, 64)) -> "SellCS":
+        """Pack a concrete dense matrix into SELL-C-σ.
+
+        ``block`` sets the (bm, bn) tile geometry of the kernel view; it
+        is independent of the slice height ``c``.
+        """
+        dense = np.asarray(dense)
+        m, n = dense.shape
+        bm, bn = block
+        row_nnz = (dense != 0).sum(axis=1)
+        order, widths = _sell_row_order(row_nnz, c, sigma)
+        mp = len(order)
+
+        # group equal-width slices into buckets (ascending width); the
+        # packed row order is bucket-major, slice-order-preserving
+        by_width: Dict[int, list] = {}
+        for s, w in enumerate(widths):
+            if w > 0:
+                by_width.setdefault(int(w), []).append(s)
+        buckets = []
+        packed_rows = []  # original (padded) row id per packed row
+        for w in sorted(by_width):
+            slices = by_width[w]
+            buckets.append((len(packed_rows), len(slices) * c, w))
+            for s in slices:
+                packed_rows.extend(order[s * c:(s + 1) * c])
+        n_packed = len(packed_rows)
+
+        # slot view (one nonzero scan per row, reused by the tile view)
+        n_slots = sum(r * w for _, r, w in buckets)
+        slot_cols = np.zeros(n_slots, np.int32)
+        slot_rows = np.zeros(n_slots, np.int32)
+        slot_vals = np.zeros(n_slots, dense.dtype)
+        out_gather = np.full(m, n_packed, np.int32)
+        slot_start = {}  # packed row -> offset of its first slot
+        row_cols = {}    # packed row -> its nonzero column indices
+        off = 0
+        for row_off, n_rows, w in buckets:
+            for i in range(n_rows):
+                r = packed_rows[row_off + i]
+                lo = off + i * w
+                slot_start[row_off + i] = lo
+                if r < m:
+                    cc = np.nonzero(dense[r])[0]
+                    row_cols[row_off + i] = cc
+                    k = len(cc)
+                    slot_cols[lo:lo + w] = cc[0] if k else 0
+                    slot_cols[lo:lo + k] = cc
+                    slot_rows[lo:lo + w] = r
+                    slot_vals[lo:lo + k] = dense[r, cc]
+                    out_gather[r] = row_off + i
+                # rows >= m are slice padding: zero slots at (0, 0)
+            off += n_rows * w
+
+        # tile view: block the packed row axis, keep live tiles only
+        tiles: Dict[Tuple[int, int], np.ndarray] = {}
+        for p, cc in row_cols.items():
+            lo = slot_start[p]
+            for k, col in enumerate(cc):
+                key = (p // bm, col // bn)
+                cell = tiles.get(key)
+                if cell is None:
+                    cell = np.full((bm, bn), n_slots, np.int32)
+                    tiles[key] = cell
+                cell[p % bm, col % bn] = lo + k
+
+        live_brs = sorted({br for br, _ in tiles})
+        br_compact = {br: i for i, br in enumerate(live_brs)}
+        n_live = len(live_brs)
+        keys = sorted(tiles)  # block-row-major, then block-column
+        t_count = len(keys)
+        tile_rows = np.zeros(t_count, np.int32)
+        tile_cols = np.zeros(t_count, np.int32)
+        tile_slot_map = np.full((t_count, bm, bn), n_slots, np.int32)
+        for t, (br, bc) in enumerate(keys):
+            tile_rows[t] = br_compact[br]
+            tile_cols[t] = bc
+            tile_slot_map[t] = tiles[(br, bc)]
+        slot_tile_pos = np.full(n_slots, t_count * bm * bn, np.int32)
+        flat = tile_slot_map.reshape(-1)
+        live = flat < n_slots
+        slot_tile_pos[flat[live]] = np.nonzero(live)[0].astype(np.int32)
+
+        # perm: live packed row -> original row (M for padding rows)
+        perm = np.full(n_live * bm, m, np.int32)
+        tile_out_gather = np.full(m, n_live * bm, np.int32)
+        for i, br in enumerate(live_brs):
+            for j in range(bm):
+                p = br * bm + j
+                if p < n_packed and packed_rows[p] < m:
+                    perm[i * bm + j] = packed_rows[p]
+                    tile_out_gather[packed_rows[p]] = i * bm + j
+
+        return SellCS(
+            slot_cols=jnp.asarray(slot_cols),
+            slot_rows=jnp.asarray(slot_rows),
+            slot_vals=jnp.asarray(slot_vals),
+            out_gather=jnp.asarray(out_gather),
+            perm=jnp.asarray(perm),
+            tile_rows=jnp.asarray(tile_rows),
+            tile_cols=jnp.asarray(tile_cols),
+            tile_slot_map=jnp.asarray(tile_slot_map),
+            slot_tile_pos=jnp.asarray(slot_tile_pos),
+            tile_out_gather=jnp.asarray(tile_out_gather),
+            shape=(m, n),
+            c=c,
+            sigma=sigma,
+            buckets=tuple(buckets),
+            block=(bm, bn),
+            n_live_block_rows=n_live,
+        )
+
+    def to_dense(self) -> np.ndarray:
+        """Host densification (scatter the slots; padding adds zeros)."""
+        m, n = self.shape
+        out = np.zeros((m, n), np.asarray(self.slot_vals).dtype)
+        rows = np.asarray(self.slot_rows)
+        cols = np.asarray(self.slot_cols)
+        vals = np.asarray(self.slot_vals)
+        np.add.at(out, (rows, cols), vals)
+        return out
+
+    def occupancy(self) -> float:
+        """Real nonzeros per stored slot (1.0 = zero padding)."""
+        nnz = int(np.count_nonzero(np.asarray(self.slot_vals)))
+        return nnz / max(self.n_slots, 1)
 
 
 # ---------------------------------------------------------------------------

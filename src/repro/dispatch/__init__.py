@@ -10,9 +10,9 @@ from repro.dispatch.dispatcher import (Plan, clear_log, dispatch_log,
                                        last_plan, plan_sddmm, plan_spmm)
 from repro.dispatch.operand import SparseOperand
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
-                                   PATH_CSR, PATH_DENSE, PATH_ELL, POLICIES,
-                                   POLICY_AUTO, POLICY_AUTOTUNE,
-                                   normalize_policy)
+                                   PATH_CSR, PATH_DENSE, PATH_ELL,
+                                   PATH_SELL, POLICIES, POLICY_AUTO,
+                                   POLICY_AUTOTUNE, normalize_policy)
 from repro.dispatch.stats import MatrixStats, sparsity_bucket
 
 __all__ = [
@@ -22,7 +22,7 @@ __all__ = [
     "last_plan", "plan_sddmm", "plan_spmm",
     "SparseOperand",
     "DEFAULT_CONFIG", "DispatchConfig", "PATHS", "PATH_CSR", "PATH_DENSE",
-    "PATH_ELL", "POLICIES", "POLICY_AUTO", "POLICY_AUTOTUNE",
+    "PATH_ELL", "PATH_SELL", "POLICIES", "POLICY_AUTO", "POLICY_AUTOTUNE",
     "normalize_policy",
     "MatrixStats", "sparsity_bucket",
 ]

@@ -24,7 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
-from repro.dispatch.policy import PATH_CSR, PATH_DENSE, PATH_ELL
+from repro.dispatch.policy import PATH_CSR, PATH_DENSE, PATH_ELL, PATH_SELL
 from repro.dispatch.stats import MatrixStats
 
 
@@ -40,6 +40,14 @@ class CostModel:
     # element.  c_csr / c_ell is the padded-stream blow-up at which the
     # scalar path overtakes the streaming path (the paper's crossover).
     c_csr: float = 12.0
+    # per-slot cost of the SELL-C-σ path: gather-granular like csr, but
+    # scatter-free (slice-local dense reduction) and load-balanced, so
+    # each slot is cheaper than a csr nonzero.  Applied to the packed
+    # slot volume (real + slice padding): where the Block-ELL blow-up
+    # explodes past c_sell/c_ell, sell takes over instead of falling off
+    # the cliff; where the matrix is dense enough for blocked streaming
+    # (blow-up below ~c_sell/c_ell), ell still wins.
+    c_sell: float = 9.0
 
     def spmm_costs(self, stats: MatrixStats, d: int) -> Dict[str, float]:
         """Relative cost of Y[M,D] = A[M,N] @ H[N,D] per path."""
@@ -47,6 +55,7 @@ class CostModel:
         return {
             PATH_DENSE: self.c_dense * stats.dense_elements * d,
             PATH_ELL: self.c_ell * stats.stored_elements * d,
+            PATH_SELL: self._sell_cost(stats, d),
             PATH_CSR: self.c_csr * stats.nnz * d,
         }
 
@@ -56,13 +65,22 @@ class CostModel:
         return {
             PATH_DENSE: self.c_dense * stats.dense_elements * k,
             PATH_ELL: self.c_ell * stats.stored_elements * k,
+            PATH_SELL: self._sell_cost(stats, k),
             PATH_CSR: self.c_csr * stats.nnz * k,
         }
 
+    def _sell_cost(self, stats: MatrixStats, inner: int) -> float:
+        # sell_stored_elements == 0 with nonzeros present means the slot
+        # volume was never measured (e.g. stats built from a transposed
+        # operand): the path is unpriceable, never auto-picked.
+        if stats.sell_stored_elements <= 0 and stats.nnz > 0:
+            return float("inf")
+        return self.c_sell * stats.sell_stored_elements * inner
+
     @staticmethod
     def pick(costs: Dict[str, float]) -> str:
-        """Cheapest path; ties broken dense < ell < csr deterministically."""
-        order = {PATH_DENSE: 0, PATH_ELL: 1, PATH_CSR: 2}
+        """Cheapest path; ties broken dense < ell < sell < csr."""
+        order = {PATH_DENSE: 0, PATH_ELL: 1, PATH_SELL: 2, PATH_CSR: 3}
         return min(costs, key=lambda p: (costs[p], order[p]))
 
 

@@ -37,8 +37,9 @@ from repro.dispatch._forms import LazyForms
 from repro.dispatch.autotune import AutotuneCache, make_key, measure
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATH_CSR,
-                                   PATH_DENSE, PATH_ELL, POLICY_AUTO,
-                                   POLICY_AUTOTUNE, normalize_policy)
+                                   PATH_DENSE, PATH_ELL, PATH_SELL,
+                                   POLICY_AUTO, POLICY_AUTOTUNE,
+                                   normalize_policy)
 from repro.dispatch.stats import MatrixStats
 
 Array = Any
@@ -157,7 +158,7 @@ def _plan(op, costs, stats, *, policy, config, use_kernel, interpret,
         costs = {p: c for p, c in costs.items() if p in candidates}
     uk = use_kernel if use_kernel is not None \
         else _default_use_kernel(config)
-    if policy in (PATH_ELL, PATH_CSR, PATH_DENSE):
+    if policy in (PATH_ELL, PATH_SELL, PATH_CSR, PATH_DENSE):
         if candidates and policy not in candidates:
             raise ValueError(
                 f"policy {policy!r} not among available paths {candidates}")
@@ -262,7 +263,7 @@ def dispatch_spmm(
     if operand is None:  # traced BlockELL: blocked path is the only option
         from repro.kernels.spmm.ops import spmm_blockell
 
-        if policy in (PATH_CSR, PATH_DENSE):
+        if policy in (PATH_SELL, PATH_CSR, PATH_DENSE):
             raise TypeError(
                 f"dispatch_spmm: policy {policy!r} needs host-visible "
                 "operand data, but the BlockELL is traced (inside jit); "
@@ -316,9 +317,12 @@ def dispatch_spmm(
                     interpret=interpret, timings_us=hit.timings_us,
                     stats=stats)
     else:
+        # the legacy LazyForms operand carries no sell packing, so the
+        # SELL-C-σ path is not a candidate here (SparseMatrix is)
         plan = plan_spmm(stats, d, policy=policy, cost_model=cost_model,
                          config=config, use_kernel=use_kernel,
-                         interpret=interpret)
+                         interpret=interpret,
+                         candidates=(PATH_ELL, PATH_CSR, PATH_DENSE))
     _record(plan)
     y = _run_spmm_path(plan.path, operand, h, use_kernel=plan.use_kernel,
                        interpret=plan.interpret, bd=bd,
@@ -429,7 +433,7 @@ def dispatch_sddmm(
     traced = _is_traced(a.blocks, a.rows, a.cols)
     uk = use_kernel if use_kernel is not None else _default_use_kernel(config)
     if traced:  # blocked path is the only tracer-safe one
-        if policy in (PATH_CSR, PATH_DENSE):
+        if policy in (PATH_SELL, PATH_CSR, PATH_DENSE):
             raise TypeError(
                 f"dispatch_sddmm: policy {policy!r} needs host-visible "
                 "operand data, but the BlockCOO is traced (inside jit); "
@@ -478,7 +482,8 @@ def dispatch_sddmm(
     else:
         plan = plan_sddmm(stats, k, policy=policy, cost_model=cost_model,
                           config=config, use_kernel=use_kernel,
-                          interpret=interpret)
+                          interpret=interpret,
+                          candidates=(PATH_ELL, PATH_CSR, PATH_DENSE))
     _record(plan)
     return _run_sddmm_path(plan.path, a, b, c, use_kernel=plan.use_kernel,
                            interpret=plan.interpret, bk=bk,

@@ -4,6 +4,11 @@ Execution-path names (shared by SpMM and SDDMM):
 
   * ``ell``   — the blocked streaming path: Block-ELL for SpMM, Block-COO
                 for SDDMM.  Pallas kernel on TPU, jnp reference elsewhere.
+  * ``sell``  — the SELL-C-σ path: rows sorted by nnz within σ-windows,
+                packed into width-adaptive slices, only live tiles
+                launched.  Kills the >99 % padding cliff of ``ell``;
+                exact-nnz work like ``csr`` but scatter-free and
+                load-balanced.  Needs a carried ``sell`` form.
   * ``csr``   — the element-granular scalar path: CSR gather/segment-sum
                 for SpMM, element-COO for SDDMM.  Exact nnz work, no MXU.
   * ``dense`` — densified fallback (the paper's Fig. 2 failure mode; only
@@ -21,9 +26,10 @@ from __future__ import annotations
 import dataclasses
 
 PATH_ELL = "ell"
+PATH_SELL = "sell"
 PATH_CSR = "csr"
 PATH_DENSE = "dense"
-PATHS = (PATH_ELL, PATH_CSR, PATH_DENSE)
+PATHS = (PATH_ELL, PATH_SELL, PATH_CSR, PATH_DENSE)
 
 POLICY_AUTO = "auto"
 POLICY_AUTOTUNE = "autotune"
@@ -37,6 +43,8 @@ _ALIASES = {
     "coo": PATH_CSR,
     "element": PATH_CSR,
     "scalar": PATH_CSR,
+    "sellcs": PATH_SELL,
+    "sell-c-sigma": PATH_SELL,
 }
 
 

@@ -19,7 +19,8 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.formats import (BlockCOO, BlockELL, CSR,
-                                blockell_stream_elements)
+                                blockell_stream_elements,
+                                sell_slot_volume)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +35,9 @@ class MatrixStats:
     n_block_rows: int
     ell_width: int                # ELL width W (0 for COO layouts)
     occupancy: float              # real blocks / stored slots (1 = no pad)
+    # slots the SELL-C-σ packing would stream (real + slice padding) at
+    # the default (C, σ); 0 = not measured (sell path unpriceable)
+    sell_stored_elements: int = 0
 
     @property
     def dense_elements(self) -> int:
@@ -61,8 +65,11 @@ class MatrixStats:
                       ) -> "MatrixStats":
         """Stats of a concrete BlockELL (host transfer of `blocks` if
         ``nnz`` is not supplied)."""
+        blocks = np.asarray(ell.blocks)  # [nbr, W, bm, bn]
         if nnz is None:
-            nnz = int(np.count_nonzero(np.asarray(ell.blocks)))
+            nnz = int(np.count_nonzero(blocks))
+        # element-row nonzero counts: sum over (slot, block-col) axes
+        row_nnz = np.count_nonzero(blocks, axis=(1, 3)).reshape(-1)
         nbr, w = ell.n_block_rows, ell.ell_width
         return MatrixStats(
             shape=ell.shape,
@@ -74,16 +81,20 @@ class MatrixStats:
             n_block_rows=nbr,
             ell_width=w,
             occupancy=ell.occupancy(),
+            sell_stored_elements=sell_slot_volume(row_nnz),
         )
 
     @staticmethod
     def from_blockcoo(coo: BlockCOO, nnz: Optional[int] = None
                       ) -> "MatrixStats":
+        blocks = np.asarray(coo.blocks)
         if nnz is None:
-            nnz = int(np.count_nonzero(np.asarray(coo.blocks)))
+            nnz = int(np.count_nonzero(blocks))
         nnzb = coo.nnzb
-        real = int((np.asarray(coo.blocks).reshape(nnzb, -1) != 0)
-                   .any(axis=1).sum())
+        real = int((blocks.reshape(nnzb, -1) != 0).any(axis=1).sum())
+        e, i, _ = np.nonzero(blocks)
+        grows = np.asarray(coo.rows)[e].astype(np.int64) * coo.bm + i
+        row_nnz = np.bincount(grows, minlength=coo.shape[0])
         return MatrixStats(
             shape=coo.shape,
             nnz=int(nnz),
@@ -93,6 +104,7 @@ class MatrixStats:
             n_block_rows=coo.shape[0] // coo.bm,
             ell_width=0,
             occupancy=real / max(nnzb, 1),
+            sell_stored_elements=sell_slot_volume(row_nnz),
         )
 
     @staticmethod
@@ -108,6 +120,7 @@ class MatrixStats:
             n_block_rows=csr.shape[0],
             ell_width=0,
             occupancy=1.0,
+            sell_stored_elements=sell_slot_volume(np.diff(csr.indptr)),
         )
 
 

@@ -1,0 +1,148 @@
+"""Tile-pruned SELL-C-σ SDDMM Pallas TPU kernel.
+
+Samples B @ C only at the live tiles of a SELL-packed operand: the grid
+walks the flat live-tile descriptor (scalar-prefetched), streams the
+(bm x bk) B tile and (bk x bn) C tile each live tile needs, contracts
+over K with the accumulator resident in VMEM, and masks with the tile's
+structural pattern at the flush — all-zero row slices were pruned at
+pack time, so no grid step ever samples a dead tile.
+
+Because SELL packs *permuted* rows, the caller passes B already gathered
+into packed row order (``b[perm]`` — the row gather the descriptor
+records); the slot extraction afterwards folds the tile output back to
+slot (element) order.
+
+Grid: (T, K/bk)   [K innermost => sequential accumulation]
+  B_perm: [L*bm, K]     -> tile (bm, bk)    at (rows[t], k)
+  C:      [K, Np]       -> tile (bk, bn)    at (k, cols[t])
+  mask:   [T, bm, bn]   -> tile (1, bm, bn) at (t, 0, 0)
+  Y:      [T, bm, bn]   -> tile (1, bm, bn) at (t, 0, 0), revisited in k
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.formats import SellCS
+from repro.kernels._compat import tpu_compiler_params
+
+
+def _sell_sddmm_kernel(rows_ref, cols_ref, b_ref, c_ref, mask_ref, o_ref,
+                       acc_ref, *, n_k: int):
+    k = pl.program_id(1)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        b_ref[...],
+        c_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _sample():
+        mask = mask_ref[0, :, :].astype(jnp.float32)
+        o_ref[0, :, :] = (mask * acc_ref[...]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bk", "out_dtype", "interpret")
+)
+def sddmm_sell_kernel(
+    tile_rows,  # int32[T] compact live block-row per tile
+    tile_cols,  # int32[T] block-column per tile
+    mask_blocks,  # dtype[T, bm, bn] structural 0/1 pattern of each tile
+    b_perm,  # dtype[L*bm, K]  B gathered into packed row order
+    c,  # dtype[K, Np]
+    *,
+    bk: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+):
+    t_count, bm, bn = mask_blocks.shape
+    m, k = b_perm.shape
+    k2, n = c.shape
+    assert k == k2 and k % bk == 0, (k, bk)
+
+    grid = (t_count, k // bk)
+    kernel = functools.partial(_sell_sddmm_kernel, n_k=k // bk)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (bm, bk), lambda t, kk, rows, cols: (rows[t], kk)
+                ),
+                pl.BlockSpec(
+                    (bk, bn), lambda t, kk, rows, cols: (kk, cols[t])
+                ),
+                pl.BlockSpec(
+                    (1, bm, bn), lambda t, kk, rows, cols: (t, 0, 0)
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, bm, bn), lambda t, kk, rows, cols: (t, 0, 0)
+            ),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((t_count, bm, bn), out_dtype),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="sddmm_sell",
+    )(tile_rows, tile_cols, b_perm, c, mask_blocks)
+    return out
+
+
+def sddmm_sell_tiles_ref(tile_rows, tile_cols, mask_blocks, b_perm, c,
+                         *, out_dtype=jnp.float32):
+    """Pure-jnp oracle of the kernel's masked tile output."""
+    t_count, bm, bn = mask_blocks.shape
+    m, k = b_perm.shape
+    _, n = c.shape
+    b_tiles = b_perm.reshape(m // bm, bm, k)[tile_rows]
+    c_tiles = c.reshape(k, n // bn, bn).transpose(1, 0, 2)[tile_cols]
+    prod = jnp.einsum(
+        "tmk,tkn->tmn",
+        b_tiles.astype(jnp.float32),
+        c_tiles.astype(jnp.float32),
+    )
+    return (mask_blocks.astype(jnp.float32) * prod).astype(out_dtype)
+
+
+def sample_sell_blocked(sell: SellCS, b, c, *, bk: int | None = None,
+                        interpret: bool = False):
+    """Raw dots (B @ C) at the live structural slots, in slot order.
+
+    ``b``: [M, K] logical rows; ``c``: [K, N] logical columns.  Output:
+    float32[n_slots] — padding slots read the appended zero cell.
+    """
+    from repro.kernels.sddmm.ops import _pick_bk
+
+    m, n = sell.shape
+    k = b.shape[1]
+    n_slots = sell.n_slots
+    if sell.n_tiles == 0:
+        return jnp.zeros((n_slots,), jnp.float32)
+    bn = sell.bn
+    n_pad = -(-n // bn) * bn
+    b_ext = jnp.concatenate([b, jnp.zeros((1, k), b.dtype)])
+    b_perm = b_ext[sell.perm]  # [n_live*bm, K]; padding rows are zero
+    if c.shape[1] != n_pad:
+        c = jnp.zeros((k, n_pad), c.dtype).at[:, :n].set(c)
+    mask = (sell.tile_slot_map < n_slots).astype(b.dtype)
+    tiles = sddmm_sell_kernel(
+        sell.tile_rows, sell.tile_cols, mask, b_perm, c,
+        bk=bk or _pick_bk(k), out_dtype=jnp.float32, interpret=interpret)
+    flat = jnp.concatenate([tiles.reshape(-1), jnp.zeros((1,), tiles.dtype)])
+    return flat[sell.slot_tile_pos]

@@ -27,7 +27,17 @@ from repro.sparse import SparseMatrix, matmul, sample
 
 # adjacency paths a Graph can execute (it carries ell + csr forms; the
 # densified fallback is deliberately excluded from auto planning)
-GRAPH_PATHS = ("ell", "csr")
+GRAPH_PATHS = ("ell", "sell", "csr")
+
+
+def graph_candidates(adj: "SparseMatrix"):
+    """Paths an adjacency's carried forms can execute (a bucketed batch
+    pads only the planned form, so candidates must follow the forms)."""
+    return tuple(p for p in GRAPH_PATHS
+                 if (p == "csr" and adj.has_form("csr"))
+                 or (p == "sell" and adj.has_form("sell"))
+                 or (p == "ell" and (adj.has_form("ell")
+                                     or adj.has_form("coo"))))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -83,8 +93,13 @@ def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
         deg = a.sum(1)
         dinv = 1.0 / np.sqrt(np.maximum(deg, 1e-12))
         a = a * dinv[:, None] * dinv[None, :]
-    adj = SparseMatrix.from_dense(a, formats=("ell", "csr"),
+    formats = ("ell", "csr")
+    adj = SparseMatrix.from_dense(a, formats=formats,
                                   block=(cfg.block_m, cfg.block_n))
+    if adj.stats is not None and adj.stats.sparsity >= 0.99:
+        # hyper-sparse adjacency: also pack SELL-C-σ so dispatch can
+        # route around the Block-ELL padding cliff
+        adj = adj.with_form("sell")
     return Graph(adj=adj, n_nodes=n)
 
 
@@ -100,12 +115,7 @@ def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
             "graph_spmm: Graph adjacency has no sparsity stats; construct "
             "it with build_graph() (or SparseMatrix.from_dense) to use "
             "policy routing")
-    # restrict candidates to the forms this adjacency actually carries
-    # (a bucketed batch pads only the planned form, not both)
-    cand = tuple(p for p in GRAPH_PATHS
-                 if (p == "csr" and graph.adj.has_form("csr"))
-                 or (p == "ell" and (graph.adj.has_form("ell")
-                                     or graph.adj.has_form("coo"))))
+    cand = graph_candidates(graph.adj)
     return matmul(graph.adj, h, policy=policy,
                   candidates=cand or GRAPH_PATHS)
 

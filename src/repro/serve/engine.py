@@ -120,7 +120,8 @@ class GNNServingEngine:
 
     def __init__(self, params, graph, scfg: Optional[GNNServeConfig] = None):
         from repro.dispatch.dispatcher import plan_spmm
-        from repro.models.gnn import GRAPH_PATHS, gcn_forward
+        from repro.models.gnn import (GRAPH_PATHS, gcn_forward,
+                                      graph_candidates)
 
         self.params = params
         self.graph = graph
@@ -131,8 +132,11 @@ class GNNServingEngine:
                 "construct it with build_graph()")
         d = self.scfg.d if self.scfg.d is not None \
             else _infer_planning_width(params)
+        # candidates: the paths this graph's carried forms can execute
+        # (a hyper-sparse adjacency also packs SELL-C-σ — see build_graph)
+        cand = graph_candidates(graph.adj)
         self.plan = plan_spmm(graph.adj.stats, d, policy=self.scfg.policy,
-                              candidates=GRAPH_PATHS)
+                              candidates=cand or GRAPH_PATHS)
 
         def fwd(p, g, x):
             return gcn_forward(p, g, x, policy=self.plan.path)

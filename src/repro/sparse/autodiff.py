@@ -36,7 +36,8 @@ import numpy as np
 
 from repro.core.formats import BlockCOO
 from repro.dispatch.dispatcher import Plan, record_plan
-from repro.dispatch.policy import PATH_CSR, PATH_DENSE, PATH_ELL
+from repro.dispatch.policy import (PATH_CSR, PATH_DENSE, PATH_ELL,
+                                   PATH_SELL)
 from repro.sparse import paths
 from repro.sparse.matrix import SparseMatrix, values_of, with_values
 
@@ -63,6 +64,21 @@ def _cotangent_like(a: SparseMatrix, form_name: str,
             forms[name] = type(form)(
                 indices=_float0_like(form.indices), blocks=dv,
                 nblocks=_float0_like(form.nblocks), shape=form.shape)
+        elif name == "sell":
+            forms[name] = type(form)(
+                slot_cols=_float0_like(form.slot_cols),
+                slot_rows=_float0_like(form.slot_rows),
+                slot_vals=dv,
+                out_gather=_float0_like(form.out_gather),
+                perm=_float0_like(form.perm),
+                tile_rows=_float0_like(form.tile_rows),
+                tile_cols=_float0_like(form.tile_cols),
+                tile_slot_map=_float0_like(form.tile_slot_map),
+                slot_tile_pos=_float0_like(form.slot_tile_pos),
+                tile_out_gather=_float0_like(form.tile_out_gather),
+                shape=form.shape, c=form.c, sigma=form.sigma,
+                buckets=form.buckets, block=form.block,
+                n_live_block_rows=form.n_live_block_rows)
         else:
             forms[name] = type(form)(
                 rows=_float0_like(form.rows), cols=_float0_like(form.cols),
@@ -76,6 +92,10 @@ def form_read_by(a: SparseMatrix, path: str) -> str:
         return "csr"
     if path == PATH_ELL:
         return "ell" if "ell" in a._forms else "coo"
+    if path == PATH_SELL:
+        # the transpose of a sell operand carries the slot triplet as an
+        # element form; the sell path falls back to it (see spmm_exec)
+        return "sell" if "sell" in a._forms else "csr"
     return a.format  # dense path densifies the primary form
 
 
@@ -99,6 +119,16 @@ def spmm_exec(cfg: Cfg, a: SparseMatrix, h):
             y = paths.spmm_coo(coo, paths.pad_rows(h, coo.shape[1]),
                                out_dtype=out_dtype)
         return y[:m]
+    if path == PATH_SELL:
+        if "sell" in a._forms:
+            return paths.spmm_sell(a._forms["sell"], h,
+                                   use_kernel=use_kernel,
+                                   interpret=interpret, bd=bd,
+                                   out_dtype=out_dtype)
+        # transposed sell operand: the slot triplet is an element form
+        r, c, v = a.form("csr")
+        y = paths.spmm_elements(r, c, v, h, m)
+        return y.astype(out_dtype) if out_dtype else y
     if path == PATH_CSR:
         r, c, v = a.form("csr")
         y = paths.spmm_elements(r, c, v, h, m)
@@ -117,6 +147,11 @@ def sample_exec(cfg: Cfg, a: SparseMatrix, b, c):
     form = a._forms[form_name]
     if path == PATH_CSR:
         return paths.sddmm_element_dots(form[0], form[1], b, c)
+    if path == PATH_SELL:
+        if form_name == "sell":
+            return paths.sample_sell(form, b, c, use_kernel=use_kernel,
+                                     interpret=interpret, bk=bk)
+        return paths.sddmm_element_dots(form[0], form[1], b, c)
     if path == PATH_ELL:
         coo = paths.ell_to_coo(form) if form_name == "ell" else form
         ones = BlockCOO(rows=coo.rows, cols=coo.cols,
@@ -132,6 +167,8 @@ def sample_exec(cfg: Cfg, a: SparseMatrix, b, c):
         full = b.astype(jnp.float32) @ c.astype(jnp.float32)
         if form_name == "csr":
             return full[form[0], form[1]].astype(b.dtype)
+        if form_name == "sell":
+            return full[form.slot_rows, form.slot_cols].astype(b.dtype)
         coo = paths.ell_to_coo(form) if form_name == "ell" else form
         full = paths.pad_cols(paths.pad_rows(full, coo.shape[0]),
                               coo.shape[1])

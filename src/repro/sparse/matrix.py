@@ -8,6 +8,9 @@ pytree-registered interface:
     consumes);
   * ``"ell"`` — :class:`repro.core.formats.BlockELL` (the SELLPACK-like
     blocked streaming layout);
+  * ``"sell"`` — :class:`repro.core.formats.SellCS` (SELL-C-σ: rows
+    sorted by nnz within σ-windows, width-adaptive slices, live tiles
+    only — the hyper-sparsity path);
   * ``"coo"`` — :class:`repro.core.formats.BlockCOO` (the SDDMM-side
     blocked layout, and the layout Block-ELL transposes into).
 
@@ -27,6 +30,7 @@ the SpMM <-> SDDMM gradient duality.
 """
 from __future__ import annotations
 
+import dataclasses
 import weakref
 from typing import Any, Dict, Optional, Tuple
 
@@ -34,16 +38,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import CSR, BlockCOO, BlockELL, _cdiv
+from repro.core.formats import (CSR, BlockCOO, BlockELL, SellCS, _cdiv,
+                                sell_slot_volume)
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
-from repro.dispatch.policy import PATH_CSR
+from repro.dispatch.policy import PATH_CSR, PATH_SELL
 from repro.dispatch.stats import MatrixStats
 from repro.sparse import paths
 from repro.sparse.plan import PlanCache
 
 Array = Any
 
-FORMATS = ("ell", "coo", "csr")
+FORMATS = ("ell", "sell", "coo", "csr")
 # feature width assumed when from_dense(format="auto") prices the paths
 _AUTO_FORMAT_D = 256  # the paper's SpMM setting (§4.1)
 
@@ -82,7 +87,11 @@ def _is_traced(*leaves) -> bool:
 
 def values_of(name: str, form) -> Array:
     """The differentiable data leaf of one form."""
-    return form[2] if name == "csr" else form.blocks
+    if name == "csr":
+        return form[2]
+    if name == "sell":
+        return form.slot_vals
+    return form.blocks
 
 
 def with_values(name: str, form, vals: Array):
@@ -92,6 +101,8 @@ def with_values(name: str, form, vals: Array):
     if name == "ell":
         return BlockELL(indices=form.indices, blocks=vals,
                         nblocks=form.nblocks, shape=form.shape)
+    if name == "sell":
+        return dataclasses.replace(form, slot_vals=vals)
     return BlockCOO(rows=form.rows, cols=form.cols, blocks=vals,
                     shape=form.shape)
 
@@ -106,6 +117,7 @@ def _blocked_stats(shape: Tuple[int, int], rows: np.ndarray,
     ub = np.unique(bids)
     counts = np.bincount((ub // nbc).astype(np.int64), minlength=nbr)
     width = max(int(counts.max()) if len(counts) else 0, 1)
+    row_nnz = np.bincount(rows.astype(np.int64), minlength=m)
     return MatrixStats(
         shape=(nbr * bm, nbc * bn),
         nnz=int(nnz),
@@ -115,6 +127,7 @@ def _blocked_stats(shape: Tuple[int, int], rows: np.ndarray,
         n_block_rows=nbr,
         ell_width=width,
         occupancy=len(ub) / max(nbr * width, 1),
+        sell_stored_elements=sell_slot_volume(row_nnz),
     )
 
 
@@ -206,13 +219,16 @@ class SparseMatrix:
             if format == "auto":
                 pick = CostModel.pick(
                     cost_model.spmm_costs(stats, _AUTO_FORMAT_D))
-                format = "csr" if pick == PATH_CSR else "ell"
+                format = {PATH_CSR: "csr", PATH_SELL: "sell"}.get(pick,
+                                                                  "ell")
             formats = (format,)
         forms: Dict[str, Any] = {}
         for name in formats:
             if name == "ell":
                 forms[name] = BlockELL.from_dense(a, bm, bn,
                                                   ell_width=ell_width)
+            elif name == "sell":
+                forms[name] = SellCS.from_dense(a, block=block)
             elif name == "coo":
                 forms[name] = BlockCOO.from_dense(a, bm, bn)
             elif name == "csr":
@@ -252,6 +268,20 @@ class SparseMatrix:
         if stats is None and not _is_traced(coo.blocks, coo.rows):
             stats = MatrixStats.from_blockcoo(coo, nnz=nnz)
         return cls({"coo": coo}, coo.shape, stats)
+
+    @classmethod
+    def from_sellcs(cls, sell: SellCS, *,
+                    stats: Optional[MatrixStats] = None) -> "SparseMatrix":
+        """Wrap an existing SELL-C-σ packing (concrete input computes
+        stats host-side; traced input needs ``stats`` or a forced path)."""
+        if stats is None and not _is_traced(sell.slot_vals,
+                                            sell.slot_rows):
+            mask = np.asarray(sell.slot_vals) != 0
+            rows = np.asarray(sell.slot_rows)[mask]
+            cols = np.asarray(sell.slot_cols)[mask]
+            stats = _blocked_stats(sell.shape, rows, cols,
+                                   sell.bm, sell.bn, nnz=len(rows))
+        return cls({"sell": sell}, sell.shape, stats)
 
     # -- basic metadata -----------------------------------------------------
 
@@ -342,6 +372,22 @@ class SparseMatrix:
         return self.with_data(jnp.where(v != 0, jnp.ones_like(v),
                                         jnp.zeros_like(v)))
 
+    def with_form(self, fmt: str) -> "SparseMatrix":
+        """This matrix plus one more carried form (lazy: a no-op when
+        ``fmt`` is already carried; host conversion otherwise).
+
+        The added form makes its execution path a dispatch candidate;
+        the plan memo is shared — plan keys include the candidate set,
+        so cached plans stay correct.
+        """
+        if fmt in self._forms:
+            return self
+        converted = self.to(fmt)
+        forms = dict(self._forms)
+        forms[fmt] = converted._forms[fmt]
+        return SparseMatrix(forms, self.shape, self.stats,
+                            cache=self._cache)
+
     # -- transpose ----------------------------------------------------------
 
     @property
@@ -357,6 +403,13 @@ class SparseMatrix:
             if name == "csr":
                 r, c, v = form
                 forms["csr"] = (c, r, v)
+            elif name == "sell":
+                # a packed tile covers permuted (non-contiguous) rows,
+                # so sell transposes element-granularly: the slot triplet
+                # with coordinates swapped IS the transposed csr form
+                # (duplicate padding coordinates carry zero values)
+                forms.setdefault(
+                    "csr", (form.slot_cols, form.slot_rows, form.slot_vals))
             else:
                 coo = paths.ell_to_coo(form) if name == "ell" else form
                 forms.setdefault("coo", paths.transpose_coo(coo))
@@ -385,6 +438,8 @@ class SparseMatrix:
         m, n = self.shape
         if name == "csr":
             out = paths.densify_elements(form[0], form[1], form[2], (m, n))
+        elif name == "sell":
+            out = paths.densify_sell(form)
         else:
             full = paths.densify_ell(form) if name == "ell" \
                 else paths.densify_coo(form)
@@ -421,15 +476,20 @@ class SparseMatrix:
         bm, bn = self.block
         if fmt == "ell":
             return SparseMatrix({"ell": BlockELL.from_dense(dense, bm, bn)},
-                                self.shape, self.stats)
+                                self.shape, self.stats, cache=self._cache)
+        if fmt == "sell":
+            return SparseMatrix(
+                {"sell": SellCS.from_dense(dense, block=(bm, bn))},
+                self.shape, self.stats, cache=self._cache)
         if fmt == "coo":
             return SparseMatrix({"coo": BlockCOO.from_dense(dense, bm, bn)},
-                                self.shape, self.stats)
+                                self.shape, self.stats, cache=self._cache)
         rows, cols = np.nonzero(dense)
         form = (jnp.asarray(rows.astype(np.int32)),
                 jnp.asarray(cols.astype(np.int32)),
                 jnp.asarray(dense[rows, cols]))
-        return SparseMatrix({"csr": form}, self.shape, self.stats)
+        return SparseMatrix({"csr": form}, self.shape, self.stats,
+                            cache=self._cache)
 
     # -- operators ----------------------------------------------------------
 

@@ -14,8 +14,9 @@ host logic over static ``MatrixStats`` aux metadata, so it happens at
 ``jax.jit`` trace time and is baked into the traced program.
 
 Candidate paths follow the forms a matrix carries: ``ell`` (blocked)
-needs an ``"ell"``/``"coo"`` form, ``csr`` (element) a ``"csr"`` form;
-``dense`` densifies on device and is always available.
+needs an ``"ell"``/``"coo"`` form, ``sell`` (SELL-C-σ, the
+hyper-sparsity path) a ``"sell"`` form, ``csr`` (element) a ``"csr"``
+form; ``dense`` densifies on device and is always available.
 """
 from __future__ import annotations
 
@@ -31,7 +32,7 @@ from repro.dispatch.dispatcher import (Plan, plan_sddmm, plan_spmm,
                                        record_plan)
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
                                    PATH_CSR, PATH_DENSE, PATH_ELL,
-                                   POLICY_AUTO, POLICY_AUTOTUNE,
+                                   PATH_SELL, POLICY_AUTO, POLICY_AUTOTUNE,
                                    normalize_policy)
 from repro.sparse import autodiff
 from repro.sparse.matrix import SparseMatrix, with_values
@@ -53,6 +54,8 @@ def available_paths(a: SparseMatrix) -> Tuple[str, ...]:
     cand = []
     if "ell" in a._forms or "coo" in a._forms:
         cand.append(PATH_ELL)
+    if "sell" in a._forms:
+        cand.append(PATH_SELL)
     if "csr" in a._forms:
         cand.append(PATH_CSR)
     cand.append(PATH_DENSE)  # device densify works for every form

@@ -10,6 +10,11 @@ Path vocabulary matches the dispatch layer (see dispatch/policy.py):
   * ``ell``   — blocked streaming: Block-ELL SpMM / Block-COO SDDMM
                 (Pallas kernel on TPU, jnp reference elsewhere), plus a
                 blocked-COO SpMM used for transposed Block-ELL operands.
+  * ``sell``  — SELL-C-σ: width-adaptive row-sorted slices.  The jnp
+                reference runs one scatter-free batched contraction per
+                width bucket (the slice descriptor is static aux, so the
+                loop unrolls at trace time); the kernel route iterates
+                live tiles only (see kernels/spmm/sell.py).
   * ``csr``   — element-granular: gather + segment-sum SpMM, per-edge
                 dot SDDMM.  Exact nnz work, no MXU.
   * ``dense`` — densify (device scatter) and run the dense matmul /
@@ -23,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import CSR, BlockCOO, BlockELL
+from repro.core.formats import CSR, BlockCOO, BlockELL, SellCS
 
 Array = Any
 
@@ -142,6 +147,76 @@ def transpose_coo(coo: BlockCOO) -> BlockCOO:
         blocks=coo.blocks.transpose(0, 2, 1),
         shape=(coo.shape[1], coo.shape[0]),
     )
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-σ ("sell") paths
+# ---------------------------------------------------------------------------
+
+
+def spmm_sell_ref(sell: SellCS, h, *, out_dtype=None):
+    """Y = A @ H with A in SELL-C-σ — the scatter-free reference.
+
+    One batched ``[rows, 1, w] @ [rows, w, D]`` contraction per width
+    bucket (slices of equal width are contiguous), then a single epilogue
+    gather that un-permutes rows and re-inserts the pruned all-zero rows.
+    Work is proportional to the *packed slot* count — there is no global
+    ELL width to pad to and no segment-sum scatter.
+    """
+    m, n = sell.shape
+    d = h.shape[1]
+    out_dtype = out_dtype or jnp.result_type(sell.slot_vals.dtype, h.dtype)
+    if not sell.buckets:
+        return jnp.zeros((m, d), out_dtype)
+    outs = []
+    off = 0
+    for _, rows, width in sell.buckets:
+        cols = sell.slot_cols[off:off + rows * width].reshape(rows, width)
+        vals = sell.slot_vals[off:off + rows * width].reshape(rows, width)
+        gathered = h[cols].astype(jnp.float32)  # [rows, w, D]
+        out = jax.lax.dot_general(
+            vals[:, None, :].astype(jnp.float32),
+            gathered,
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        )  # [rows, 1, D]
+        outs.append(out.reshape(rows, d))
+        off += rows * width
+    packed = jnp.concatenate(outs + [jnp.zeros((1, d), jnp.float32)])
+    return packed[sell.out_gather].astype(out_dtype)
+
+
+def spmm_sell(sell: SellCS, h, *, use_kernel: bool = False,
+              interpret: bool = False, bd: Optional[int] = None,
+              out_dtype=None):
+    """Y = A @ H with A in SELL-C-σ; h carries the logical N rows."""
+    if use_kernel or interpret:
+        from repro.kernels.spmm.sell import spmm_sell_blocked
+
+        return spmm_sell_blocked(sell, h, bd=bd, out_dtype=out_dtype,
+                                 interpret=interpret)
+    return spmm_sell_ref(sell, h, out_dtype=out_dtype)
+
+
+def sample_sell(sell: SellCS, b, c, *, use_kernel: bool = False,
+                interpret: bool = False, bk: Optional[int] = None):
+    """Raw dots of B @ C at the packed slots (slot order).
+
+    Padding slots sample at their repeated coordinates on the element
+    route and read the appended zero cell on the tile route; either way
+    the caller masks them against the structural values.
+    """
+    if use_kernel or interpret:
+        from repro.kernels.sddmm.sell import sample_sell_blocked
+
+        return sample_sell_blocked(sell, b, c, bk=bk, interpret=interpret)
+    return sddmm_element_dots(sell.slot_rows, sell.slot_cols, b, c)
+
+
+def densify_sell(sell: SellCS):
+    """Device scatter of the slots (padding slots add zeros)."""
+    m, n = sell.shape
+    return jnp.zeros((m, n), sell.slot_vals.dtype) \
+        .at[sell.slot_rows, sell.slot_cols].add(sell.slot_vals)
 
 
 # ---------------------------------------------------------------------------

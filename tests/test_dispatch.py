@@ -102,18 +102,28 @@ def test_sddmm_kernel_path_interpret_matches_oracle():
 
 
 # ---------------------------------------------------------------------------
-# (b) the crossover: ELL at 90% sparsity, CSR at >=99%
+# (b) the crossover: ELL at 90% sparsity, CSR at >=99% (legacy paths),
+#     SELL taking over the hyper-sparse side when its form is carried
 # ---------------------------------------------------------------------------
 
 
+# among the legacy-executable paths (no sell packing carried)
 EXPECTED_PATH = {0.5: "dense", 0.9: "ell", 0.99: "csr", 0.999: "csr"}
+# with every path priceable, SELL-C-σ owns the hyper-sparse side
+EXPECTED_PATH_FULL = {0.5: "dense", 0.9: "ell", 0.99: "sell",
+                      0.999: "sell"}
 
 
 @pytest.mark.parametrize("sparsity", SWEEP)
 def test_cost_model_reproduces_paper_crossover(sweep_operands, sparsity):
+    """The paper's crossover among the three original paths is intact;
+    unrestricted, the sell path replaces csr past the padding cliff."""
     _, op = sweep_operands[sparsity]
-    plan = plan_spmm(op.stats(), D, policy="auto")
-    assert plan.path == EXPECTED_PATH[sparsity], plan.describe()
+    legacy = plan_spmm(op.stats(), D, policy="auto",
+                       candidates=("ell", "csr", "dense"))
+    assert legacy.path == EXPECTED_PATH[sparsity], legacy.describe()
+    full = plan_spmm(op.stats(), D, policy="auto")
+    assert full.path == EXPECTED_PATH_FULL[sparsity], full.describe()
 
 
 @pytest.mark.parametrize("sparsity", SWEEP)
@@ -151,6 +161,95 @@ def test_padded_stream_blowup_drives_the_crossover(sweep_operands):
     assert blowups == sorted(blowups)
     ratio = cm.c_csr / cm.c_ell
     assert blowups[SWEEP.index(0.9)] < ratio < blowups[SWEEP.index(0.99)]
+
+
+# ---------------------------------------------------------------------------
+# the sell path at extreme sparsity (the tentpole crossover)
+# ---------------------------------------------------------------------------
+
+
+def _sell_capable(dense):
+    from repro.sparse import SparseMatrix
+
+    return SparseMatrix.from_dense(dense, formats=("ell", "csr", "sell"),
+                                   block=(BLOCK, BLOCK))
+
+
+@pytest.mark.parametrize("sparsity,expected", [
+    (0.9, "ell"),       # moderate sparsity: blocked streaming still wins
+    (0.995, "sell"),    # past the padding cliff: sell takes over
+    (0.999, "sell"),
+])
+def test_auto_routes_sell_past_the_cliff(sparsity, expected):
+    """policy=auto picks sell at >=99.5% sparsity, ell at 90%."""
+    from repro.dispatch.dispatcher import clear_log, dispatch_log
+    from repro.sparse import matmul
+
+    rng = np.random.default_rng(51)
+    dense = _uniform_sparse(rng, N, sparsity)
+    op = _sell_capable(dense)
+    h = jnp.asarray(rng.normal(size=(N, D)).astype(np.float32))
+    clear_log()
+    y = matmul(op, h, policy="auto")
+    plan = last_plan("spmm")
+    assert plan.path == expected, plan.describe()
+    np.testing.assert_allclose(np.asarray(y), dense @ np.asarray(h),
+                               rtol=2e-4, atol=2e-4)
+    # the dispatch log records the decision AND the predicted costs
+    logged = [p for p in dispatch_log() if p.op == "spmm"]
+    assert logged and logged[-1].path == expected
+    assert logged[-1].costs is not None
+    assert set(logged[-1].costs) == {"ell", "sell", "csr", "dense"}
+    assert logged[-1].costs[expected] == min(logged[-1].costs.values())
+    assert "cost model" in logged[-1].reason
+
+
+@pytest.mark.parametrize("sparsity", [0.9, 0.995])
+def test_sell_dispatch_log_records_predicted_cost_sddmm(sparsity):
+    from repro.sparse import SparseMatrix, sddmm
+
+    rng = np.random.default_rng(53)
+    mask = (rng.random((N, N)) < (1.0 - sparsity)).astype(np.float32)
+    op = SparseMatrix.from_dense(mask, formats=("coo", "csr", "sell"),
+                                 block=(BLOCK, BLOCK))
+    b = jnp.asarray(rng.normal(size=(N, 2)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(2, N)).astype(np.float32))
+    sddmm(op, b, c, policy="auto")
+    plan = last_plan("sddmm")
+    assert plan.costs is not None and "sell" in plan.costs
+    if sparsity >= 0.995:
+        assert plan.path == "sell", plan.describe()
+
+
+def test_sell_not_a_candidate_without_the_form():
+    """A matrix that never packed sell cannot be routed to it."""
+    from repro.sparse import SparseMatrix, matmul
+
+    rng = np.random.default_rng(57)
+    dense = _uniform_sparse(rng, 128, 0.999)
+    op = SparseMatrix.from_dense(dense, formats=("ell", "csr"),
+                                 block=(BLOCK, BLOCK))
+    h = jnp.asarray(rng.normal(size=(128, 8)).astype(np.float32))
+    with pytest.raises(ValueError, match="not among available paths"):
+        matmul(op, h, policy="sell")
+    matmul(op, h, policy="auto")
+    assert last_plan("spmm").path in ("ell", "csr", "dense")
+
+
+def test_with_form_makes_sell_routable():
+    """Lazy conversion: adding the sell form turns the path on."""
+    from repro.sparse import SparseMatrix, matmul
+
+    rng = np.random.default_rng(59)
+    dense = _uniform_sparse(rng, 256, 0.995)
+    op = SparseMatrix.from_dense(dense, formats=("ell", "csr"),
+                                 block=(BLOCK, BLOCK))
+    both = op.with_form("sell")
+    assert both.formats == ("ell", "csr", "sell")
+    assert op.with_form("ell") is op  # no-op when already carried
+    h = jnp.asarray(rng.normal(size=(256, D)).astype(np.float32))
+    matmul(both, h, policy="auto")
+    assert last_plan("spmm").path == "sell"
 
 
 # ---------------------------------------------------------------------------

@@ -3,8 +3,9 @@ import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro.core.formats import (BlockELL, BlockCOO, CSR,
+from repro.core.formats import (BlockELL, BlockCOO, CSR, SellCS,
                                 blockell_stream_elements,
+                                sell_slot_volume,
                                 sellpack_stream_elements)
 from repro.core.topology import (balance_permutation, block_row_counts,
                                  choose_ell_width, padding_stats)
@@ -191,3 +192,80 @@ def test_sellpack_stream_elements_monotone_in_nnz(rng):
         if prev is not None:
             assert tot >= prev, (density, tot, prev)
         prev = tot
+
+
+# ---------------------------------------------------------------------------
+# SELL-C-σ
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,n,c,sigma,block", [
+    (64, 64, 8, 0, (16, 16)),
+    (100, 70, 8, 0, (4, 4)),       # ragged vs the tile grid
+    (128, 128, 4, 32, (8, 8)),     # σ-windowed sort
+    (33, 47, 8, 8, (4, 4)),
+])
+@pytest.mark.parametrize("density", [0.005, 0.05, 0.3])
+def test_sellcs_roundtrip(rng, m, n, c, sigma, block, density):
+    dense = _rand_sparse(rng, m, n, density)
+    sell = SellCS.from_dense(dense, c=c, sigma=sigma, block=block)
+    np.testing.assert_array_equal(sell.to_dense(), dense)
+    # the stats helper prices exactly what the packer built
+    assert sell.n_slots == sell_slot_volume(
+        (dense != 0).sum(axis=1), c, sigma)
+
+
+def test_sellcs_prunes_empty_slices(rng):
+    """All-zero rows cost nothing: no slots, no tiles, no output rows."""
+    dense = np.zeros((128, 128), np.float32)
+    dense[:16] = _rand_sparse(rng, 16, 128, 0.2)
+    sell = SellCS.from_dense(dense, c=8, block=(16, 16))
+    # only the 16 live rows are packed (2 slices of 8)
+    assert sell.n_packed_rows == 16
+    assert (np.asarray(sell.out_gather)[16:] == sell.n_packed_rows).all()
+    np.testing.assert_array_equal(sell.to_dense(), dense)
+
+
+def test_sellcs_no_dead_tiles(rng):
+    """Every stored tile holds at least one live slot (tile pruning)."""
+    dense = _rand_sparse(rng, 256, 256, 0.005)
+    sell = SellCS.from_dense(dense, c=8, block=(4, 4))
+    tsm = np.asarray(sell.tile_slot_map).reshape(sell.n_tiles, -1)
+    assert ((tsm < sell.n_slots).any(axis=1)).all()
+    # tiles are block-row-major so the kernel can accumulate sequentially
+    assert (np.diff(np.asarray(sell.tile_rows)) >= 0).all()
+
+
+def test_sellcs_width_adaptive_beats_global_ell_width(rng):
+    """The cliff mechanism: at hyper-sparsity the sell slot volume stays
+    ~nnz while Block-ELL's global-width stream volume blows up."""
+    dense = _rand_sparse(rng, 512, 512, 0.005)
+    # one heavy row forces the Block-ELL global width wide
+    dense[0] = np.where(rng.random(512) < 0.5, 1.0, 0.0)
+    nnz = int((dense != 0).sum())
+    ell = BlockELL.from_dense(dense, 4, 4)
+    ell_stored = int(np.prod(ell.blocks.shape))
+    sell = SellCS.from_dense(dense, c=8, block=(4, 4))
+    # the heavy row pads only its own C-row slice, never the matrix
+    assert sell.n_slots < nnz * 3
+    assert ell_stored > 10 * sell.n_slots
+
+
+def test_sellcs_sigma_window_tradeoff(rng):
+    """Full sort packs at least as tight as windowed sort (σ trades
+    packing efficiency for permutation locality)."""
+    dense = _rand_sparse(rng, 256, 256, 0.02)
+    row_nnz = (dense != 0).sum(axis=1)
+    full = sell_slot_volume(row_nnz, 8, 0)
+    for sigma in (16, 64, 128):
+        assert sell_slot_volume(row_nnz, 8, sigma) >= full
+    # no sort at all (window == slice) can only be worse or equal
+    assert sell_slot_volume(row_nnz, 8, 8) >= full
+
+
+def test_sellcs_empty_matrix():
+    sell = SellCS.from_dense(np.zeros((64, 64), np.float32))
+    assert sell.n_slots == 0 and sell.n_tiles == 0
+    assert sell.n_live_block_rows == 0 and sell.buckets == ()
+    np.testing.assert_array_equal(sell.to_dense(),
+                                  np.zeros((64, 64), np.float32))

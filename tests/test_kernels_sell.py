@@ -1,0 +1,146 @@
+"""Tile-pruned SELL-C-σ Pallas kernels vs jnp oracles (interpret mode).
+
+The SpMM kernel's flush-on-row-change logic (width-adaptive: each
+block-row owns a different number of grid steps) is the part the global
+fixed-width Block-ELL kernel never exercises, so the parity sweep leans
+on skewed and pruned structures.  Larger parity cases are slow-marked
+for the scheduled kernel-parity CI job (``--runslow``).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.formats import SellCS
+from repro.kernels.sddmm.sell import sample_sell_blocked
+from repro.kernels.spmm.sell import (sell_tile_blocks, spmm_sell_blocked,
+                                     spmm_sell_kernel, spmm_sell_tiles_ref)
+from repro.sparse.paths import spmm_sell_ref
+
+
+def _rand_sparse(rng, m, n, density):
+    mask = rng.random((m, n)) < density
+    return np.where(mask, rng.normal(size=(m, n)), 0.0).astype(np.float32)
+
+
+def _pad_h(sell, h):
+    n_pad = -(-sell.shape[1] // sell.bn) * sell.bn
+    out = np.zeros((n_pad, h.shape[1]), h.dtype)
+    out[: h.shape[0]] = h
+    return jnp.asarray(out)
+
+
+@pytest.mark.parametrize("m,n,block,c", [
+    (128, 128, (16, 16), 8),
+    (100, 70, (4, 4), 8),      # ragged vs the tile grid
+    (256, 128, (8, 16), 4),    # rectangular tiles
+])
+@pytest.mark.parametrize("density", [0.005, 0.05, 0.3])
+def test_spmm_sell_kernel_matches_oracles(rng, m, n, block, c, density):
+    dense = _rand_sparse(rng, m, n, density)
+    sell = SellCS.from_dense(dense, c=c, block=block)
+    d = 32
+    h = rng.normal(size=(n, d)).astype(np.float32)
+    out = np.asarray(spmm_sell_blocked(sell, jnp.asarray(h),
+                                       interpret=True))
+    np.testing.assert_allclose(out, dense @ h, rtol=5e-4, atol=5e-4)
+    # kernel == tile-granular jnp oracle on the compact output
+    if sell.n_live_block_rows:
+        hh = _pad_h(sell, h)
+        compact = spmm_sell_kernel(
+            sell.tile_rows, sell.tile_cols, sell_tile_blocks(sell), hh,
+            n_live_block_rows=sell.n_live_block_rows, bd=d,
+            interpret=True)
+        ref = spmm_sell_tiles_ref(
+            sell.tile_rows, sell.tile_cols, sell_tile_blocks(sell), hh,
+            n_live_block_rows=sell.n_live_block_rows)
+        np.testing.assert_allclose(np.asarray(compact), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4)
+    # kernel route == bucketed reference route
+    ref2 = np.asarray(spmm_sell_ref(sell, jnp.asarray(h)))
+    np.testing.assert_allclose(out, ref2, rtol=5e-4, atol=5e-4)
+
+
+def test_spmm_sell_skewed_widths(rng):
+    """A few hot rows + many near-empty rows: block-rows own wildly
+    different live-tile counts, stressing the flush logic."""
+    dense = np.zeros((256, 256), np.float32)
+    dense[:4] = _rand_sparse(rng, 4, 256, 0.6)       # hot rows
+    dense[100:140] = _rand_sparse(rng, 40, 256, 0.01)
+    dense[255, 255] = 2.0                            # lone corner element
+    sell = SellCS.from_dense(dense, c=8, block=(8, 8))
+    h = rng.normal(size=(256, 64)).astype(np.float32)
+    out = np.asarray(spmm_sell_blocked(sell, jnp.asarray(h),
+                                       interpret=True))
+    np.testing.assert_allclose(out, dense @ h, rtol=5e-4, atol=5e-4)
+
+
+def test_spmm_sell_empty_rows_never_launch(rng):
+    """Pruned (all-zero) rows produce exact zeros via the epilogue
+    gather — they are not kernel output."""
+    dense = np.zeros((128, 128), np.float32)
+    dense[:8] = _rand_sparse(rng, 8, 128, 0.2)
+    sell = SellCS.from_dense(dense, c=8, block=(16, 16))
+    assert sell.n_live_block_rows == 1  # 8 live rows -> one block-row
+    h = rng.normal(size=(128, 32)).astype(np.float32)
+    out = np.asarray(spmm_sell_blocked(sell, jnp.asarray(h),
+                                       interpret=True))
+    assert np.all(out[8:] == 0.0)
+    np.testing.assert_allclose(out, dense @ h, rtol=5e-4, atol=5e-4)
+
+
+def test_spmm_sell_empty_matrix():
+    sell = SellCS.from_dense(np.zeros((64, 64), np.float32))
+    out = spmm_sell_blocked(sell, jnp.ones((64, 8), jnp.float32),
+                            interpret=True)
+    assert out.shape == (64, 8)
+    assert np.all(np.asarray(out) == 0.0)
+
+
+@pytest.mark.parametrize("density", [0.01, 0.2])
+def test_sddmm_sell_kernel_matches_dense_sample(rng, density):
+    m, n, k = 128, 96, 64
+    dense = _rand_sparse(rng, m, n, density)
+    sell = SellCS.from_dense(dense, c=8, block=(16, 16))
+    b = rng.normal(size=(m, k)).astype(np.float32)
+    c = rng.normal(size=(k, n)).astype(np.float32)
+    dots = np.asarray(sample_sell_blocked(
+        sell, jnp.asarray(b), jnp.asarray(c), interpret=True))
+    full = b @ c
+    sr = np.asarray(sell.slot_rows)
+    sc = np.asarray(sell.slot_cols)
+    real = np.asarray(sell.slot_vals) != 0
+    np.testing.assert_allclose(dots[real], full[sr[real], sc[real]],
+                               rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("m,n,d,block", [
+    (512, 512, 256, (64, 128)),
+    (384, 768, 128, (128, 128)),
+])
+@pytest.mark.parametrize("density", [0.002, 0.02, 0.2])
+def test_spmm_sell_kernel_parity_large(rng, m, n, d, block, density):
+    """Slow kernel-parity sweep (scheduled CI job): MXU-shaped tiles."""
+    dense = _rand_sparse(rng, m, n, density)
+    sell = SellCS.from_dense(dense, c=16, block=block)
+    h = rng.normal(size=(n, d)).astype(np.float32)
+    out = np.asarray(spmm_sell_blocked(sell, jnp.asarray(h),
+                                       interpret=True))
+    np.testing.assert_allclose(out, dense @ h, rtol=1e-3, atol=1e-3)
+
+
+@pytest.mark.slow
+def test_sddmm_sell_kernel_parity_large(rng):
+    m, n, k = 512, 512, 256
+    dense = _rand_sparse(rng, m, n, 0.01)
+    sell = SellCS.from_dense(dense, c=16, block=(64, 64))
+    b = rng.normal(size=(m, k)).astype(np.float32)
+    c = rng.normal(size=(k, n)).astype(np.float32)
+    dots = np.asarray(sample_sell_blocked(
+        sell, jnp.asarray(b), jnp.asarray(c), interpret=True))
+    full = b @ c
+    sr = np.asarray(sell.slot_rows)
+    sc = np.asarray(sell.slot_cols)
+    real = np.asarray(sell.slot_vals) != 0
+    np.testing.assert_allclose(dots[real], full[sr[real], sc[real]],
+                               rtol=1e-2, atol=1e-2)

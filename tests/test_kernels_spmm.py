@@ -57,6 +57,35 @@ def test_spmm_empty_rows(rng):
     assert np.all(np.asarray(out)[64:] == 0.0)
 
 
+@pytest.mark.parametrize("m", [100, 96, 65])
+def test_spmm_ragged_all_padding_final_block_row(rng, m):
+    """Regression: ragged n_rows % bm != 0 whose *final* block-row is
+    pure padding (all-zero slot indices, nblocks == 0).
+
+    The accumulator scratch is revisited across grid steps; a flush bug
+    would leak the previous block-row's accumulator into the padded
+    tail instead of zeros.  Pin the exact contract: padded output rows
+    are written and are exactly zero, real rows match the oracle.
+    """
+    n, d = 256, 128
+    dense = np.zeros((m, n), np.float32)
+    live = min(64, m)  # all nonzeros in the first block-row
+    dense[:live] = np.where(rng.random((live, n)) < 0.3,
+                            rng.normal(size=(live, n)), 0)
+    ell = BlockELL.from_dense(dense, 64, 128)
+    assert ell.shape[0] % 64 == 0 and ell.shape[0] > m
+    # the final block-row is pure padding: no blocks, clipped indices
+    assert int(np.asarray(ell.nblocks)[-1]) == 0
+    assert np.all(np.asarray(ell.indices)[-1] == 0)
+    h = rng.normal(size=(n, d)).astype(np.float32)
+    out = np.asarray(spmm_blockell(ell, jnp.asarray(h), interpret=True))
+    oracle = np.zeros((ell.shape[0], d), np.float32)
+    oracle[:m] = dense @ h
+    np.testing.assert_allclose(out, oracle, rtol=3e-4, atol=3e-4)
+    assert np.all(out[live:] == 0.0), "stale accumulator leaked into " \
+        "the all-padding block-row"
+
+
 @settings(max_examples=10, deadline=None)
 @given(
     nbr=st.integers(1, 4), nbc=st.integers(1, 4),

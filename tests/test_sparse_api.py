@@ -19,9 +19,10 @@ SWEEP = [0.5, 0.9, 0.99]
 N, D = 128, 16
 BLOCK = (16, 16)
 
-# (dispatch path, format that can execute it) — covers all three paths
+# (dispatch path, format that can execute it) — covers all four paths
 PATH_FORMATS = [("ell", "ell"), ("ell", "coo"), ("csr", "csr"),
-                ("dense", "ell"), ("dense", "csr")]
+                ("sell", "sell"), ("dense", "ell"), ("dense", "csr"),
+                ("dense", "sell")]
 
 
 def _uniform_sparse(rng, n, sparsity):
@@ -49,7 +50,7 @@ def h(rng):
 # ---------------------------------------------------------------------------
 
 
-@pytest.mark.parametrize("fmt", ["ell", "coo", "csr"])
+@pytest.mark.parametrize("fmt", ["ell", "sell", "coo", "csr"])
 def test_roundtrip_and_matmul_every_format(operands, h, fmt):
     dense = operands[0.9]
     A = SparseMatrix.from_dense(dense, format=fmt, block=BLOCK)
@@ -61,18 +62,18 @@ def test_roundtrip_and_matmul_every_format(operands, h, fmt):
 
 
 def test_auto_format_follows_measured_structure(operands):
-    # moderate sparsity -> blocked form; hyper-sparsity -> element form
+    # moderate sparsity -> blocked form; hyper-sparsity -> sell packing
     assert SparseMatrix.from_dense(operands[0.5], block=BLOCK).format \
         == "ell"
     rng = np.random.default_rng(3)
     hyper = _uniform_sparse(rng, 256, 0.999)
-    assert SparseMatrix.from_dense(hyper, block=(4, 4)).format == "csr"
+    assert SparseMatrix.from_dense(hyper, block=(4, 4)).format == "sell"
 
 
 def test_conversion_table(operands):
     dense = operands[0.9]
     A = SparseMatrix.from_dense(dense, format="ell", block=BLOCK)
-    for fmt in ("ell", "coo", "csr"):
+    for fmt in ("ell", "sell", "coo", "csr"):
         B = A.to(fmt)
         assert B.format == fmt
         np.testing.assert_array_equal(B.to_dense(), dense)
@@ -92,7 +93,7 @@ def test_multiform_carries_both_paths(operands, h):
 
 def test_transpose_and_rmatmul(operands, h):
     dense = operands[0.9]
-    for fmt in ("ell", "csr", "coo"):
+    for fmt in ("ell", "sell", "csr", "coo"):
         A = SparseMatrix.from_dense(dense, format=fmt, block=BLOCK)
         np.testing.assert_allclose(np.asarray(A.T @ h),
                                    dense.T @ np.asarray(h),
@@ -325,7 +326,7 @@ def test_spmm_grads_match_dense_autodiff(operands, h, sparsity, path, fmt):
 
 @pytest.mark.parametrize("sparsity", SWEEP)
 @pytest.mark.parametrize("path,fmt", [("ell", "coo"), ("csr", "csr"),
-                                      ("dense", "coo")])
+                                      ("sell", "sell"), ("dense", "coo")])
 def test_sddmm_grads_match_dense_autodiff(operands, rng, sparsity, path,
                                           fmt):
     dense = operands[sparsity]
@@ -376,11 +377,11 @@ def test_gcn_loss_grad_matches_dense_reference(operands, rng, path):
                                    rtol=1e-5, atol=1e-5)
 
 
-@pytest.mark.parametrize("path", ["ell", "csr", "dense"])
+@pytest.mark.parametrize("path", ["ell", "sell", "csr", "dense"])
 def test_spmm_backward_routes_through_sddmm_dispatcher(operands, h, path):
     """Acceptance: the SpMM backward provably runs as an SDDMM (and the
     dH half as an SpMM on Aᵀ), visible in the dispatch log."""
-    fmt = "csr" if path == "csr" else "ell"
+    fmt = {"csr": "csr", "sell": "sell"}.get(path, "ell")
     A = SparseMatrix.from_dense(operands[0.9], format=fmt, block=BLOCK)
     clear_log()
     jax.grad(lambda v, hh: jnp.sum(matmul(A.with_data(v), hh,
@@ -477,3 +478,29 @@ def test_legacy_operand_warns(operands):
 
     with pytest.warns(DeprecationWarning, match="SparseMatrix"):
         SparseOperand.from_dense(operands[0.9])
+
+
+def test_sell_kernel_route_grads_match_dense(operands, h):
+    """The tile-pruned Pallas route (interpret mode) differentiates to
+    the same gradients as dense autodiff."""
+    dense = operands[0.99]
+    A = SparseMatrix.from_dense(dense, format="sell", block=BLOCK)
+    w = jnp.asarray(np.linspace(-1, 1, D, dtype=np.float32))
+
+    def sparse_loss(vals, hh):
+        y = matmul(A.with_data(vals), hh, policy="sell",
+                   use_kernel=True, interpret=True)
+        return jnp.sum(jnp.tanh(y) * w)
+
+    def dense_loss(ad, hh):
+        return jnp.sum(jnp.tanh(ad @ hh) * w)
+
+    gv, gh = jax.grad(sparse_loss, argnums=(0, 1))(A.data, h)
+    g_ad, g_hd = jax.grad(dense_loss, argnums=(0, 1))(jnp.asarray(dense), h)
+    np.testing.assert_allclose(np.asarray(gh), np.asarray(g_hd),
+                               rtol=1e-5, atol=1e-5)
+    mask = dense != 0
+    g_sparse = A.with_data(gv).to_dense()
+    np.testing.assert_allclose(g_sparse[mask], np.asarray(g_ad)[mask],
+                               rtol=1e-5, atol=1e-5)
+    assert (g_sparse[~mask] == 0).all()
