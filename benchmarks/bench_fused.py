@@ -1,0 +1,180 @@
+"""Fused-vs-unfused sparse-pipeline sweep (GCN epilogue + GAT attention).
+
+Two layer-level comparisons, each jitted end to end:
+
+  * **GCN layer** — ``relu(A @ (H W) + b)`` as (a) the unfused
+    composition (planned SpMM, then a separate bias+relu pass) vs (b)
+    the fused epilogue (``matmul(..., epilogue="relu", bias=b)``).
+  * **GAT layer** — SDDMM → leaky_relu → segment softmax → SpMM as (a)
+    three planned dispatches vs (b) one ``fused_graph_attention``.
+
+Wall-clock on a noisy CPU container under-reports the fusion win (XLA
+already fuses elementwise tails into neighboring ops), so each row also
+carries the *deterministic* fusion metric: how many E-length (edge-
+count-sized) intermediates the traced program materializes.  The fused
+GAT pipeline must show **zero** — the E-length score vector exists only
+as VMEM-resident tile statistics — while the unfused composition
+carries several.  That streamed-intermediate reduction is the
+TPU-relevant quantity (every such array is an HBM round-trip on the
+real target).
+
+Writes ``BENCH_fused.json`` (the committed fused-pipeline baseline).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+
+JSON_PATH = "BENCH_fused.json"
+
+
+def count_length_intermediates(closed_jaxpr, length: int) -> int:
+    """Count 1-D arrays of exactly ``length`` produced inside a jaxpr.
+
+    Recurses into sub-jaxprs (pjit/custom_vjp bodies), so the count
+    covers the whole traced program — the static analog of counting
+    E-length HBM round-trips.
+    """
+
+    def walk(jaxpr) -> int:
+        n = 0
+        for eqn in jaxpr.eqns:
+            for var in eqn.outvars:
+                aval = getattr(var, "aval", None)
+                if aval is not None and getattr(aval, "shape", None) \
+                        == (length,):
+                    n += 1
+            for v in eqn.params.values():
+                sub = getattr(v, "jaxpr", None)
+                if sub is not None:
+                    n += walk(sub)
+        return n
+
+    return walk(closed_jaxpr.jaxpr)
+
+
+def _graph(n: int, density: float, seed: int):
+    from repro.configs.paper_gnn import GNNConfig
+    from repro.models.gnn import build_graph
+
+    rng = np.random.default_rng(seed)
+    adj = (rng.random((n, n)) < density).astype(np.float32)
+    np.fill_diagonal(adj, 0.0)
+    cfg = GNNConfig(name="fused-bench", in_features=64, hidden=64,
+                    n_classes=8, n_layers=2, block_m=16, block_n=16)
+    return build_graph(adj, cfg), cfg
+
+
+def run(quick: bool = True, policy: str = "auto",
+        json_path: Optional[str] = JSON_PATH) -> Dict:
+    from repro.models.gnn import _segment_softmax, graph_spmm
+    from repro.sparse import fused_graph_attention, matmul, sample
+
+    ns = [512] if quick else [1024, 2048]
+    densities = [0.1, 0.01] if quick else [0.1, 0.01, 0.001]
+    d = 64
+    rows: List[Dict] = []
+    rng = np.random.default_rng(7)
+    for n in ns:
+        for density in densities:
+            graph, cfg = _graph(n, density, seed=int(n + 1 / density))
+            adj = graph.adj
+            nnz = adj.stats.nnz
+            h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+            b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+
+            # -- GCN layer: relu(A @ H + b) -----------------------------
+            def gcn_unfused(h):
+                return jax.nn.relu(graph_spmm(graph, h, policy=policy) + b)
+
+            def gcn_fused(h):
+                return graph_spmm(graph, h, policy=policy,
+                                  epilogue="relu", bias=b)
+
+            ju, jf = jax.jit(gcn_unfused), jax.jit(gcn_fused)
+            np.testing.assert_allclose(np.asarray(ju(h)),
+                                       np.asarray(jf(h)),
+                                       rtol=1e-4, atol=1e-4)
+            t_u = time_fn(ju, h, warmup=2, iters=10)
+            t_f = time_fn(jf, h, warmup=2, iters=10)
+            tag = f"fused_gcn_n{n}_d{density:g}"
+            derived = (f"speedup_vs_unfused={t_u / t_f:.2f};"
+                       f"unfused_us={t_u:.1f}")
+            emit(tag, t_f, derived)
+            rows.append({"name": tag, "us_per_call": round(t_f, 1),
+                         "unfused_us": round(t_u, 1),
+                         "speedup": round(t_u / t_f, 3)})
+
+            # -- GAT layer: one-pass attention --------------------------
+            s_src = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+            s_dst = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+            patt = adj.to("csr").pattern()
+
+            def gat_unfused(s_src, s_dst, h):
+                q = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)
+                c = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=0)
+                e = sample(patt, q, c, policy="csr").data
+                e = jax.nn.leaky_relu(e, 0.2)
+                alpha = _segment_softmax(e, patt.form("csr")[0], n)
+                return matmul(patt.with_data(alpha), h, policy="csr")
+
+            def gat_fused(s_src, s_dst, h):
+                q = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)
+                k = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=1)
+                return fused_graph_attention(adj, q, k, h, policy=policy)
+
+            def gat_fused_blocked(s_src, s_dst, h):
+                # the streaming (kernel-target) layout: the E-length
+                # metric is pinned on this path — csr is E-granular by
+                # construction and stays the reference
+                q = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)
+                k = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=1)
+                return fused_graph_attention(adj, q, k, h, policy="ell")
+
+            ju, jf = jax.jit(gat_unfused), jax.jit(gat_fused)
+            np.testing.assert_allclose(
+                np.asarray(ju(s_src, s_dst, h)),
+                np.asarray(jf(s_src, s_dst, h)), rtol=1e-4, atol=1e-4)
+            e_unfused = count_length_intermediates(
+                jax.make_jaxpr(gat_unfused)(s_src, s_dst, h), nnz)
+            e_fused = count_length_intermediates(
+                jax.make_jaxpr(gat_fused_blocked)(s_src, s_dst, h), nnz)
+            t_u = time_fn(ju, s_src, s_dst, h, warmup=2, iters=10)
+            t_f = time_fn(jf, s_src, s_dst, h, warmup=2, iters=10)
+            tag = f"fused_gat_n{n}_d{density:g}"
+            derived = (f"speedup_vs_unfused={t_u / t_f:.2f};"
+                       f"e_intermediates={e_fused}"
+                       f"(unfused={e_unfused});nnz={nnz}")
+            emit(tag, t_f, derived)
+            rows.append({"name": tag, "us_per_call": round(t_f, 1),
+                         "unfused_us": round(t_u, 1),
+                         "speedup": round(t_u / t_f, 3),
+                         "e_intermediates_fused": e_fused,
+                         "e_intermediates_unfused": e_unfused,
+                         "nnz": int(nnz)})
+
+    results = {"quick": quick, "policy": policy, "rows": rows}
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--policy", default="auto",
+                    choices=["auto", "autotune", "ell", "sell", "csr",
+                             "dense"])
+    ap.add_argument("--json", default=JSON_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, policy=args.policy, json_path=args.json)

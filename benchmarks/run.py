@@ -9,12 +9,17 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_crossover    — Fig. 9's crossover as a dispatch-path sweep
   bench_serve        — batched-serving throughput/latency sweep (also
                        writes BENCH_serve.json)
+  bench_fused        — fused-vs-unfused GCN epilogue + GAT attention
+                       sweep (also writes BENCH_fused.json)
 
 ``python -m benchmarks.run [--full] [--policy auto] [--json out.json]``
 (quick mode by default so the CPU container finishes in minutes; --full
 matches the paper's largest sizes; --policy sets the dispatch policy for
 the benches that route through the dispatch layer; --json additionally
-dumps every emitted row plus the plan-cache counters as JSON).
+dumps every emitted row plus the plan-cache counters as JSON;
+--calibrate runs the ``dispatch.autotune.calibrate`` microbenchmark
+first and prices the spmm/sddmm benches with the measured constants,
+round-tripped through an ``AutotuneCache`` save/load).
 
 When both kernel benches (spmm + sddmm) run with ``--json``, their rows
 are additionally written to ``BENCH_kernels.json`` — the committed
@@ -40,12 +45,16 @@ def main() -> None:
                     help="dispatch surface for the spmm/sddmm benches")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the emitted rows as JSON to PATH")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="measure the cost-model constants on this "
+                         "backend first and use them for the kernel "
+                         "benches (persisted via AutotuneCache)")
     args = ap.parse_args()
     quick = not args.full
 
     from benchmarks import (bench_crossover, bench_dense_limit,
-                            bench_footprint, bench_sddmm, bench_serve,
-                            bench_spmm, common)
+                            bench_footprint, bench_fused, bench_sddmm,
+                            bench_serve, bench_spmm, common)
     from repro.sparse import plan_cache_stats, reset_plan_cache_stats
     benches = {
         "dense_limit": bench_dense_limit.run,
@@ -54,8 +63,9 @@ def main() -> None:
         "sddmm": bench_sddmm.run,
         "crossover": bench_crossover.run,
         "serve": bench_serve.run,
+        "fused": bench_fused.run,
     }
-    dispatched = {"spmm", "sddmm", "crossover", "serve"}
+    dispatched = {"spmm", "sddmm", "crossover", "serve", "fused"}
     api_axis = {"spmm", "sddmm"}
     only = set(args.only.split(",")) if args.only else None
     if only:
@@ -66,12 +76,41 @@ def main() -> None:
     reset_plan_cache_stats()
     common.reset_rows()
     print("name,us_per_call,derived")
+
+    cost_model = None
+    if args.calibrate:
+        import os
+        import tempfile
+
+        from repro.dispatch import AutotuneCache, calibrate
+
+        print("# --- calibrate ---", file=sys.stderr)
+        cache = AutotuneCache()
+        calibrate(n=256 if quick else 1024, d=64,
+                  densities=(0.5, 0.05, 0.005), cache=cache)
+        # the calibration must survive the cache's JSON round-trip —
+        # that is how a serving host would pick it up next process
+        fd, path = tempfile.mkstemp(suffix=".json")
+        os.close(fd)
+        try:
+            cache.save(path)
+            reloaded = AutotuneCache()
+            reloaded.load(path)
+            cost_model = reloaded.cost_model
+        finally:
+            os.remove(path)
+        common.emit("calibrate_constants", 0.0,
+                    f"c_ell={cost_model.c_ell:.3g};"
+                    f"c_sell={cost_model.c_sell:.3g};"
+                    f"c_csr={cost_model.c_csr:.3g}")
+
     for name, fn in benches.items():
         if only and name not in only:
             continue
         print(f"# --- {name} ---", file=sys.stderr)
         if name in api_axis:
-            fn(quick=quick, policy=args.policy, api=args.api)
+            fn(quick=quick, policy=args.policy, api=args.api,
+               cost_model=cost_model)
         elif name in dispatched:
             fn(quick=quick, policy=args.policy)
         else:

@@ -2,27 +2,29 @@
 
 See DESIGN.md for the policy, cost-model inputs, and autotune cache key.
 """
-from repro.dispatch.autotune import (AutotuneCache, GLOBAL_CACHE, make_key,
-                                     measure)
+from repro.dispatch.autotune import (AutotuneCache, GLOBAL_CACHE, calibrate,
+                                     make_key, measure)
 from repro.dispatch.cost_model import CostModel, DEFAULT_COST_MODEL
 from repro.dispatch.dispatcher import (Plan, clear_log, dispatch_log,
                                        dispatch_sddmm, dispatch_spmm,
-                                       last_plan, plan_sddmm, plan_spmm)
+                                       last_plan, plan_fused_attention,
+                                       plan_sddmm, plan_spmm)
 from repro.dispatch.operand import SparseOperand
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
                                    PATH_CSR, PATH_DENSE, PATH_ELL,
-                                   PATH_SELL, POLICIES, POLICY_AUTO,
-                                   POLICY_AUTOTUNE, normalize_policy)
+                                   PATH_FUSED_ATTN, PATH_SELL, POLICIES,
+                                   POLICY_AUTO, POLICY_AUTOTUNE,
+                                   normalize_policy)
 from repro.dispatch.stats import MatrixStats, sparsity_bucket
 
 __all__ = [
-    "AutotuneCache", "GLOBAL_CACHE", "make_key", "measure",
+    "AutotuneCache", "GLOBAL_CACHE", "calibrate", "make_key", "measure",
     "CostModel", "DEFAULT_COST_MODEL",
     "Plan", "clear_log", "dispatch_log", "dispatch_sddmm", "dispatch_spmm",
-    "last_plan", "plan_sddmm", "plan_spmm",
+    "last_plan", "plan_fused_attention", "plan_sddmm", "plan_spmm",
     "SparseOperand",
     "DEFAULT_CONFIG", "DispatchConfig", "PATHS", "PATH_CSR", "PATH_DENSE",
-    "PATH_ELL", "PATH_SELL", "POLICIES", "POLICY_AUTO", "POLICY_AUTOTUNE",
-    "normalize_policy",
+    "PATH_ELL", "PATH_FUSED_ATTN", "PATH_SELL", "POLICIES", "POLICY_AUTO",
+    "POLICY_AUTOTUNE", "normalize_policy",
     "MatrixStats", "sparsity_bucket",
 ]

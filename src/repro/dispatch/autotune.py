@@ -41,11 +41,19 @@ class Measurement:
 
 
 class AutotuneCache:
-    """Thread-safe (key -> winning path) cache with JSON persistence."""
+    """Thread-safe (key -> winning path) cache with JSON persistence.
+
+    Besides the per-key timing entries, the cache can carry one
+    calibrated :class:`~repro.dispatch.cost_model.CostModel` (see
+    :func:`calibrate`) — ``save``/``load`` round-trip it, so a backend's
+    measured cost constants persist across processes alongside the
+    timing winners.
+    """
 
     def __init__(self):
         self._lock = threading.Lock()
         self._entries: Dict[AutotuneKey, Measurement] = {}
+        self.cost_model = None  # Optional[CostModel], set by calibrate()
         self.hits = 0
         self.misses = 0
 
@@ -68,30 +76,45 @@ class AutotuneCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self.cost_model = None
             self.hits = 0
             self.misses = 0
 
     # -- persistence --------------------------------------------------------
 
     def to_json(self) -> str:
+        import dataclasses as _dc
+
         with self._lock:
-            payload = [
+            entries = [
                 {"key": list(k), "path": m.path, "timings_us": m.timings_us}
                 for k, m in self._entries.items()
             ]
-        return json.dumps(payload, indent=2, sort_keys=True)
+            cm = (_dc.asdict(self.cost_model)
+                  if self.cost_model is not None else None)
+        return json.dumps({"entries": entries, "cost_model": cm},
+                          indent=2, sort_keys=True)
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
             f.write(self.to_json())
 
     def load(self, path: str) -> None:
+        from repro.dispatch.cost_model import CostModel
+
         with open(path) as f:
             payload = json.load(f)
+        # legacy payloads were a bare entry list (no calibration)
+        entries = payload if isinstance(payload, list) \
+            else payload.get("entries", [])
+        cm = None if isinstance(payload, list) \
+            else payload.get("cost_model")
         with self._lock:
-            for row in payload:
+            for row in entries:
                 self._entries[tuple(row["key"])] = Measurement(
                     path=row["path"], timings_us=row["timings_us"])
+            if cm is not None:
+                self.cost_model = CostModel(**cm)
 
 
 def _time_us(fn: Callable[[], object], warmup: int, iters: int) -> float:
@@ -130,6 +153,86 @@ def measure(candidates: Dict[str, Callable[[], object]], *,
             "autotune: every candidate path failed") from last_exc
     best = min(finite, key=finite.get)
     return Measurement(path=best, timings_us=timings)
+
+
+def calibrate(
+    *,
+    n: int = 512,
+    d: int = 64,
+    densities: Tuple[float, ...] = (0.5, 0.05, 0.005),
+    seed: int = 0,
+    warmup: int = 1,
+    iters: int = 3,
+    cache: Optional[AutotuneCache] = None,
+):
+    """Microbenchmark the per-element path costs on the running backend.
+
+    The analytic cost model prices each path as (elements streamed) x
+    (a per-element constant); the shipped constants encode the *paper's*
+    hardware asymmetry, which a CPU container or a different TPU
+    generation will not match exactly.  This pass times every execution
+    path on synthetic operands across a few sparsity regimes, normalizes
+    each timing by the volume that path streams, and expresses it
+    relative to the dense path's per-element time — exactly the
+    ``c_ell`` / ``c_sell`` / ``c_csr`` constants, but measured.
+
+    Returns the tuned :class:`~repro.dispatch.cost_model.CostModel`
+    (median across densities; a path with no valid measurement keeps its
+    shipped constant).  When ``cache`` is given the model is attached to
+    it, so ``AutotuneCache.save``/``load`` persist the calibration.
+    """
+    import numpy as np
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
+    from repro.sparse import SparseMatrix, autodiff
+
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    # time what the dispatcher would actually run on this backend: the
+    # Pallas kernels on TPU, the jnp references elsewhere
+    use_kernel = jax.default_backend() == "tpu"
+    ratios: Dict[str, list] = {"ell": [], "sell": [], "csr": []}
+    for density in densities:
+        dense = np.where(rng.random((n, n)) < density,
+                         rng.normal(size=(n, n)), 0.0).astype(np.float32)
+        a = SparseMatrix.from_dense(dense, formats=("ell", "sell", "csr"))
+        stats = a.stats
+        thunks = {
+            p: (lambda p=p: autodiff.spmm_exec(
+                (p, use_kernel, False, None, None), a, h))
+            for p in ("ell", "sell", "csr", "dense")
+        }
+        m = measure(thunks, warmup=warmup, iters=iters)
+        t = m.timings_us
+        if t.get("dense", float("inf")) == float("inf"):
+            continue
+        per_dense = t["dense"] / max(stats.dense_elements * d, 1)
+        streamed = {"ell": stats.stored_elements,
+                    "sell": stats.sell_stored_elements,
+                    "csr": stats.nnz}
+        for p, vol in streamed.items():
+            tp = t.get(p, float("inf"))
+            if tp != float("inf") and vol > 0 and per_dense > 0:
+                ratios[p].append((tp / (vol * d)) / per_dense)
+
+    def _tuned(path: str, shipped: float) -> float:
+        if not ratios[path]:
+            return shipped
+        # floor at a small positive constant so a noisy fast run can
+        # never make a sparse path look cheaper than free
+        return max(float(np.median(ratios[path])), 1e-3)
+
+    cm = CostModel(
+        c_ell=_tuned("ell", DEFAULT_COST_MODEL.c_ell),
+        c_sell=_tuned("sell", DEFAULT_COST_MODEL.c_sell),
+        c_csr=_tuned("csr", DEFAULT_COST_MODEL.c_csr),
+    )
+    if cache is not None:
+        cache.cost_model = cm
+    return cm
 
 
 # Process-global cache used by the dispatcher's `autotune` policy.

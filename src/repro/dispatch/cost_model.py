@@ -69,6 +69,25 @@ class CostModel:
             PATH_CSR: self.c_csr * stats.nnz * k,
         }
 
+    def fused_attn_costs(self, stats: MatrixStats, k: int, d: int
+                         ) -> Dict[str, float]:
+        """Relative cost of the one-pass fused attention pipeline.
+
+        The unfused SDDMM→softmax→SpMM composition streams the topology
+        three times (score it, normalize it, aggregate with it); the
+        fused kernel streams every live tile exactly once, doing the
+        k-wide score dot and the d-wide V accumulation while the tile is
+        resident — so each path is priced at ONE stream of its layout's
+        stored volume at the combined inner width ``k + d``.
+        """
+        inner = max(int(k), 1) + max(int(d), 1)
+        return {
+            PATH_DENSE: self.c_dense * stats.dense_elements * inner,
+            PATH_ELL: self.c_ell * stats.stored_elements * inner,
+            PATH_SELL: self._sell_cost(stats, inner),
+            PATH_CSR: self.c_csr * stats.nnz * inner,
+        }
+
     def _sell_cost(self, stats: MatrixStats, inner: int) -> float:
         # sell_stored_elements == 0 with nonzeros present means the slot
         # volume was never measured (e.g. stats built from a transposed

@@ -36,10 +36,10 @@ from repro.dispatch import autotune as autotune_mod
 from repro.dispatch._forms import LazyForms
 from repro.dispatch.autotune import AutotuneCache, make_key, measure
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
-from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATH_CSR,
-                                   PATH_DENSE, PATH_ELL, PATH_SELL,
-                                   POLICY_AUTO, POLICY_AUTOTUNE,
-                                   normalize_policy)
+from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
+                                   PATH_CSR, PATH_DENSE, PATH_ELL,
+                                   PATH_FUSED_ATTN, PATH_SELL, POLICY_AUTO,
+                                   POLICY_AUTOTUNE, normalize_policy)
 from repro.dispatch.stats import MatrixStats
 
 Array = Any
@@ -49,8 +49,8 @@ Array = Any
 class Plan:
     """One resolved dispatch decision (also the reporting record)."""
 
-    op: str                      # "spmm" | "sddmm"
-    path: str                    # ell | csr | dense
+    op: str                      # "spmm" | "sddmm" | "fused_attn"
+    path: str                    # ell | sell | csr | dense
     policy: str                  # policy that produced this plan
     reason: str                  # human-readable why
     use_kernel: bool             # ell path only: Pallas kernel vs jnp ref
@@ -58,12 +58,17 @@ class Plan:
     costs: Optional[Dict[str, float]] = None       # analytic model output
     timings_us: Optional[Dict[str, float]] = None  # autotune output
     stats: Optional[MatrixStats] = None
+    # fused-pipeline tag: the epilogue description for a fused SpMM
+    # ("relu+bias"), "attn" for the one-pass attention; None = unfused
+    fused: Optional[str] = None
 
     def describe(self) -> str:
         extra = ""
+        if self.fused is not None:
+            extra += f" fused={self.fused}"
         if self.stats is not None:
-            extra = (f" density={self.stats.density:.2e}"
-                     f" blowup={self.stats.padded_stream_blowup:.1f}")
+            extra += (f" density={self.stats.density:.2e}"
+                      f" blowup={self.stats.padded_stream_blowup:.1f}")
         return f"{self.op}->{self.path} [{self.policy}: {self.reason}]{extra}"
 
 
@@ -146,6 +151,37 @@ def plan_sddmm(
     return _plan("sddmm", cost_model.sddmm_costs(stats, k), stats,
                  policy=policy, config=config, use_kernel=use_kernel,
                  interpret=interpret, candidates=candidates)
+
+
+def plan_fused_attention(
+    stats: MatrixStats,
+    k: int,
+    d: int,
+    *,
+    policy: str = POLICY_AUTO,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    candidates: Optional[Tuple[str, ...]] = None,
+) -> Plan:
+    """Plan the one-pass fused SDDMM→softmax→SpMM attention pipeline.
+
+    ``k`` is the score inner width (the SDDMM's K), ``d`` the value
+    feature width (the SpMM's D).  The fused pipeline streams the
+    topology once at combined width ``k + d`` — see
+    ``CostModel.fused_attn_costs`` — instead of the unfused
+    composition's three passes, so the layout choice is made on the
+    single-stream cost surface.
+    """
+    plan = _plan(PATH_FUSED_ATTN,
+                 cost_model.fused_attn_costs(stats, k, d), stats,
+                 policy=policy, config=config, use_kernel=use_kernel,
+                 interpret=interpret, candidates=candidates)
+    return dataclasses.replace(
+        plan, fused="attn",
+        reason=plan.reason if plan.policy in PATHS
+        else f"one-stream fused pricing (k={k}, d={d}): {plan.reason}")
 
 
 def _plan(op, costs, stats, *, policy, config, use_kernel, interpret,

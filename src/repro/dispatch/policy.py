@@ -31,6 +31,13 @@ PATH_CSR = "csr"
 PATH_DENSE = "dense"
 PATHS = (PATH_ELL, PATH_SELL, PATH_CSR, PATH_DENSE)
 
+# Op tag of the one-pass fused SDDMM→softmax→SpMM pipeline.  Not a
+# storage path — a fused plan still names one of the layout paths above
+# — but the cost model prices it as ONE stream of the topology (the
+# unfused composition streams it three times), and plans carry this tag
+# in ``Plan.op`` so ``dispatch_log()`` shows fused decisions distinctly.
+PATH_FUSED_ATTN = "fused_attn"
+
 POLICY_AUTO = "auto"
 POLICY_AUTOTUNE = "autotune"
 POLICIES = (POLICY_AUTO, POLICY_AUTOTUNE) + PATHS

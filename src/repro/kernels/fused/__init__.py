@@ -1,0 +1,25 @@
+"""Fused sparse pipelines: SpMM+epilogue and one-pass graph attention.
+
+Kernel-level fusion of the repo's streaming sparse ops so intermediates
+stay resident in VMEM instead of round-tripping HBM (the paper's
+streamed-volume argument applied across op boundaries):
+
+  * :mod:`repro.kernels.fused.epilogue` — the hashable ``Epilogue`` spec
+    (act / bias / residual) and its jnp apply/grad helpers;
+  * :mod:`repro.kernels.fused.spmm` — Block-ELL and SELL-C-σ SpMM with
+    the epilogue applied to the VMEM accumulator at the output flush;
+  * :mod:`repro.kernels.fused.attention` — SDDMM→edge-act→segment-
+    softmax→SpMM in one pass over the topology's live tiles (max/sum
+    online softmax; the E-length score vector never exists in HBM).
+
+The differentiable front-ends live in ``repro.sparse.ops``
+(``matmul(..., epilogue=...)`` and ``fused_graph_attention``).
+"""
+from repro.kernels.fused.epilogue import (Epilogue, act_grad_from_out,
+                                          apply_act, apply_epilogue,
+                                          normalize_epilogue)
+
+__all__ = [
+    "Epilogue", "act_grad_from_out", "apply_act", "apply_epilogue",
+    "normalize_epilogue",
+]

@@ -1,0 +1,119 @@
+"""Epilogue vocabulary for fused SpMM.
+
+An :class:`Epilogue` is a small *hashable* spec of the elementwise tail
+applied to the SpMM accumulator before the single output flush:
+
+    out = act(A @ H + bias + residual)
+
+It is static plan metadata (part of the dispatch plan key and the
+``custom_vjp`` nondiff config), so the same spec is usable inside a
+Pallas kernel body (trace-time Python) and in the jnp reference paths.
+The bias/residual *arrays* are separate differentiable operands — the
+spec only records which of them participate (``has_bias`` /
+``has_residual``) and the activation.
+
+Activation gradients are evaluated from the *output* sign
+(``act_grad_from_out``): for relu / leaky_relu the pre-activation sign
+is recoverable from the post-activation sign, so the backward pass needs
+no extra residual beyond the forward output.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+ACTS = ("identity", "relu", "leaky_relu")
+
+
+@dataclasses.dataclass(frozen=True)
+class Epilogue:
+    """Hashable spec of the fused SpMM tail: act(y + bias + residual)."""
+
+    act: str = "identity"
+    negative_slope: float = 0.01   # leaky_relu only
+    has_bias: bool = False
+    has_residual: bool = False
+
+    def __post_init__(self):
+        if self.act not in ACTS:
+            raise ValueError(
+                f"unknown epilogue activation {self.act!r}; expected one "
+                f"of {ACTS}")
+
+    def describe(self) -> str:
+        parts = [self.act] if self.act != "identity" else []
+        if self.has_bias:
+            parts.append("bias")
+        if self.has_residual:
+            parts.append("residual")
+        return "+".join(parts) or "identity"
+
+
+def normalize_epilogue(epilogue, bias, residual) -> Optional[Epilogue]:
+    """Canonicalize the public (epilogue, bias, residual) kwargs.
+
+    ``epilogue`` may be an activation name, an :class:`Epilogue`, or
+    None; supplying ``bias``/``residual`` alone implies an identity-act
+    epilogue.  Returns None when there is nothing to fuse.
+    """
+    if epilogue is None and bias is None and residual is None:
+        return None
+    if epilogue is None:
+        epi = Epilogue()
+    elif isinstance(epilogue, Epilogue):
+        epi = epilogue
+    else:
+        epi = Epilogue(act=str(epilogue),
+                       negative_slope=0.2 if epilogue == "leaky_relu"
+                       else 0.01)
+    has_bias = bias is not None
+    has_residual = residual is not None
+    if epi.has_bias != has_bias or epi.has_residual != has_residual:
+        epi = dataclasses.replace(epi, has_bias=has_bias,
+                                  has_residual=has_residual)
+    return epi
+
+
+def apply_act(z, act: str, negative_slope: float):
+    """The epilogue activation on an accumulator tile (f32 in, f32 out)."""
+    if act == "identity":
+        return z
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(z >= 0, z, negative_slope * z)
+    raise ValueError(f"unknown epilogue activation {act!r}")
+
+
+def act_grad_from_out(out, act: str, negative_slope: float):
+    """d act/dz evaluated from the *post*-activation value.
+
+    Valid because relu/leaky_relu (slope > 0) preserve the sign of z:
+    out > 0 <=> z > 0 and out >= 0 <=> z >= 0.
+    """
+    if act == "identity":
+        return jnp.ones_like(out)
+    if act == "relu":
+        return jnp.where(out > 0, 1.0, 0.0).astype(out.dtype)
+    if act == "leaky_relu":
+        return jnp.where(out >= 0, 1.0, negative_slope).astype(out.dtype)
+    raise ValueError(f"unknown epilogue activation {act!r}")
+
+
+def apply_epilogue(y, epi: Optional[Epilogue], bias=None, residual=None):
+    """Reference application of the epilogue to a [M, D] product.
+
+    This is what the non-kernel execution paths run after their SpMM —
+    XLA fuses the elementwise tail into the surrounding computation, so
+    the *semantics* match the in-register kernel epilogue exactly.
+    """
+    if epi is None:
+        return y
+    z = y.astype(jnp.float32)
+    if epi.has_bias:
+        z = z + bias.astype(jnp.float32)
+    if epi.has_residual:
+        z = z + residual.astype(jnp.float32)
+    return apply_act(z, epi.act, epi.negative_slope).astype(y.dtype)

@@ -1,9 +1,14 @@
 """GCN / GAT on the SpMM + SDDMM substrate — the paper's driving app.
 
-GCN layer:   H' = act( Â (H W) )           — one SpMM per layer (paper §2.1)
+GCN layer:   H' = act( Â (H W) )           — one SpMM per layer (paper §2.1);
+             with ``fuse=True`` (default) the bias+act tail rides the
+             SpMM's fused epilogue instead of a separate full pass.
 GAT layer:   e = SDDMM(A, B, C) with d=2   — per paper §4.4, B/C hold source
              /destination attention scores; then segment-softmax over each
              row's edges and SpMM with the attention-weighted adjacency.
+             With ``fuse=True`` (default) the whole chain runs as ONE
+             ``fused_graph_attention`` dispatch (no E-length score vector
+             materialized on the blocked paths).
 
 The adjacency is one ``repro.sparse.SparseMatrix`` carrying both the
 Block-ELL (MXU path) and element (scalar path) forms, so the dispatch
@@ -23,7 +28,8 @@ import numpy as np
 
 from repro.configs.paper_gnn import GNNConfig
 from repro.models.layers import _he
-from repro.sparse import SparseMatrix, matmul, sample
+from repro.sparse import (SparseMatrix, fused_graph_attention, matmul,
+                          sample)
 
 # adjacency paths a Graph can execute (it carries ell + csr forms; the
 # densified fallback is deliberately excluded from auto planning)
@@ -103,12 +109,15 @@ def build_graph(adj_dense: np.ndarray, cfg: GNNConfig,
     return Graph(adj=adj, n_nodes=n)
 
 
-def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
+def graph_spmm(graph: Graph, h, *, policy: str = "auto", epilogue=None,
+               bias=None, residual=None):
     """One message-passing step A @ H, routed by the dispatch layer.
 
     The adjacency carries Block-ELL and element forms, so those are the
     candidate paths; the plan is made from the matrix's static stats and
     is therefore jit-trace safe (and memoized per graph instance).
+    ``epilogue``/``bias``/``residual`` fuse the layer's elementwise tail
+    into the aggregation (see ``repro.sparse.ops.matmul``).
     """
     if graph.adj is None or graph.adj.stats is None:
         raise ValueError(
@@ -117,7 +126,8 @@ def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
             "policy routing")
     cand = graph_candidates(graph.adj)
     return matmul(graph.adj, h, policy=policy,
-                  candidates=cand or GRAPH_PATHS)
+                  candidates=cand or GRAPH_PATHS, epilogue=epilogue,
+                  bias=bias, residual=residual)
 
 
 # ---------------------------------------------------------------------------
@@ -125,30 +135,50 @@ def graph_spmm(graph: Graph, h, *, policy: str = "auto"):
 # ---------------------------------------------------------------------------
 
 
-def init_gcn(key, cfg: GNNConfig) -> Dict:
+def init_gcn(key, cfg: GNNConfig, *, bias: bool = False) -> Dict:
     dims = [cfg.in_features] + [cfg.hidden] * (cfg.n_layers - 1) \
         + [cfg.n_classes]
     ks = jax.random.split(key, cfg.n_layers)
-    return {"w": [_he(ks[i], (dims[i], dims[i + 1]))
-                  for i in range(cfg.n_layers)]}
+    params = {"w": [_he(ks[i], (dims[i], dims[i + 1]))
+                    for i in range(cfg.n_layers)]}
+    if bias:
+        params["b"] = [jnp.zeros((dims[i + 1],), jnp.float32)
+                       for i in range(cfg.n_layers)]
+    return params
 
 
 def gcn_forward(params, graph: Graph, x, *, use_blockell: bool = True,
-                policy: Optional[str] = None):
+                policy: Optional[str] = None, fuse: bool = True):
     """GCN forward pass.
 
     ``policy`` (when given) routes each layer's aggregation through the
     sparsity-adaptive dispatcher ("auto"/"ell"/"csr"); the legacy
     ``use_blockell`` flag forces the corresponding path otherwise.
+
+    ``fuse=True`` (default) folds each layer's elementwise tail —
+    per-layer bias (when the params carry ``"b"``) and the inter-layer
+    relu — into the aggregation SpMM's epilogue, so the raw product
+    never pays a separate full pass.  ``fuse=False`` keeps the unfused
+    composition as the oracle.
     """
     if policy is None:
         policy = "ell" if use_blockell else "csr"
+    biases = params.get("b")
     h = x
+    n_layers = len(params["w"])
     for i, w in enumerate(params["w"]):
         h = h @ w
-        h = graph_spmm(graph, h, policy=policy)
-        if i < len(params["w"]) - 1:
-            h = jax.nn.relu(h)
+        b = biases[i] if biases is not None else None
+        inner = i < n_layers - 1
+        if fuse:
+            h = graph_spmm(graph, h, policy=policy,
+                           epilogue="relu" if inner else None, bias=b)
+        else:
+            h = graph_spmm(graph, h, policy=policy)
+            if b is not None:
+                h = h + b
+            if inner:
+                h = jax.nn.relu(h)
     return h
 
 
@@ -204,24 +234,46 @@ def _segment_softmax(scores, row_ids, n_rows):
     return ex / jnp.maximum(den[row_ids], 1e-12)
 
 
-def gat_forward(params, graph: Graph, x):
+def gat_forward(params, graph: Graph, x, *, policy: Optional[str] = None,
+                fuse: bool = True):
+    """GAT forward pass (single head, d=2 SDDMM scores per the paper).
+
+    ``fuse=True`` (default) runs each layer's whole attention
+    aggregation — SDDMM scores, leaky-relu, segment softmax, SpMM — as
+    ONE planned ``fused_graph_attention`` dispatch over the adjacency's
+    carried forms: a single plan per layer in the dispatch log, and no
+    E-length score vector materialized on the blocked paths.
+
+    ``fuse=False`` keeps the unfused three-dispatch composition as the
+    oracle; it too now routes through the sparsity-adaptive dispatcher
+    (``policy``, default "auto") instead of hand-forcing the csr path.
+    """
+    policy = "auto" if policy is None else policy
     h = x
     n = graph.n_nodes
+    cand = graph_candidates(graph.adj) if fuse else None
     # 0/1 edge pattern in element form: the SDDMM sampling operand (the
     # attention scores ignore the normalized adjacency weights)
-    patt = graph.adj.to("csr").pattern()
-    row_ids = graph.row_ids
+    patt = None if fuse else graph.adj.to("csr").pattern()
     for i, w in enumerate(params["w"]):
         h = h @ w
         s_src = (h @ params["a_src"][i])[:, 0]  # [N]
         s_dst = (h @ params["a_dst"][i])[:, 0]
-        # SDDMM with K=2 (paper §4.4): B=[s_src, 1], C=[[1],[s_dst]]
-        b = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)  # [N,2]
-        c = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=0)  # [2,N]
-        e = sample(patt, b, c, policy="csr").data  # [nnz]
-        e = jax.nn.leaky_relu(e, 0.2)
-        alpha = _segment_softmax(e, row_ids, n)
-        h = matmul(patt.with_data(alpha), h, policy="csr")
+        # score factors with K=2 (paper §4.4): q=[s_src, 1], k=[1, s_dst]
+        # so (q kᵀ)[i, j] = s_src[i] + s_dst[j]
+        q = jnp.stack([s_src, jnp.ones_like(s_src)], axis=1)  # [N,2]
+        if fuse:
+            k = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=1)  # [N,2]
+            h = fused_graph_attention(graph.adj, q, k, h,
+                                      edge_act="leaky_relu",
+                                      negative_slope=0.2, policy=policy,
+                                      candidates=cand or None)
+        else:
+            c = jnp.stack([jnp.ones_like(s_dst), s_dst], axis=0)  # [2,N]
+            e = sample(patt, q, c, policy=policy).data  # [nnz]
+            e = jax.nn.leaky_relu(e, 0.2)
+            alpha = _segment_softmax(e, graph.row_ids, n)
+            h = matmul(patt.with_data(alpha), h, policy=policy)
         if i < len(params["w"]) - 1:
             h = jax.nn.elu(h)
     return h

@@ -86,6 +86,8 @@ class GNNServeConfig:
     policy: str = "auto"   # dispatch policy for the aggregation SpMM
     jit: bool = True
     d: Optional[int] = None  # planning feature width (inferred if None)
+    model: str = "gcn"     # "gcn" | "gat"
+    fuse: bool = True      # fused epilogue (gcn) / one-pass attn (gat)
 
 
 def _infer_planning_width(params) -> int:
@@ -119,8 +121,8 @@ class GNNServingEngine:
     """
 
     def __init__(self, params, graph, scfg: Optional[GNNServeConfig] = None):
-        from repro.dispatch.dispatcher import plan_spmm
-        from repro.models.gnn import (GRAPH_PATHS, gcn_forward,
+        from repro.dispatch.dispatcher import plan_fused_attention, plan_spmm
+        from repro.models.gnn import (GRAPH_PATHS, gat_forward, gcn_forward,
                                       graph_candidates)
 
         self.params = params
@@ -130,16 +132,38 @@ class GNNServingEngine:
             raise ValueError(
                 "GNNServingEngine: Graph adjacency has no sparsity stats; "
                 "construct it with build_graph()")
+        if self.scfg.model not in ("gcn", "gat"):
+            raise ValueError(
+                f"GNNServeConfig.model must be 'gcn' or 'gat', got "
+                f"{self.scfg.model!r}")
         d = self.scfg.d if self.scfg.d is not None \
             else _infer_planning_width(params)
         # candidates: the paths this graph's carried forms can execute
         # (a hyper-sparse adjacency also packs SELL-C-σ — see build_graph)
         cand = graph_candidates(graph.adj)
-        self.plan = plan_spmm(graph.adj.stats, d, policy=self.scfg.policy,
-                              candidates=cand or GRAPH_PATHS)
+        fuse = self.scfg.fuse
+        if self.scfg.model == "gat" and fuse:
+            # one-pass attention: priced as a single stream of the
+            # topology at the combined (score + value) width
+            self.plan = plan_fused_attention(
+                graph.adj.stats, 2, d, policy=self.scfg.policy,
+                candidates=cand or GRAPH_PATHS)
+        else:
+            self.plan = plan_spmm(graph.adj.stats, d,
+                                  policy=self.scfg.policy,
+                                  candidates=cand or GRAPH_PATHS)
 
-        def fwd(p, g, x):
-            return gcn_forward(p, g, x, policy=self.plan.path)
+        if self.scfg.model == "gat":
+            # unfused GAT samples on the element pattern, so the baked
+            # layout plan only applies to the fused one-pass pipeline
+            gat_policy = self.plan.path if fuse else self.scfg.policy
+
+            def fwd(p, g, x):
+                return gat_forward(p, g, x, policy=gat_policy, fuse=fuse)
+        else:
+            def fwd(p, g, x):
+                return gcn_forward(p, g, x, policy=self.plan.path,
+                                   fuse=fuse)
 
         self._fwd = jax.jit(fwd) if self.scfg.jit else fwd
         self.n_requests = 0
@@ -158,6 +182,9 @@ class GNNServingEngine:
 
         stats = self.graph.adj.stats
         return {
+            "model": self.scfg.model,
+            "fused": self.scfg.fuse,
+            "plan_op": self.plan.op,
             "path": self.plan.path,
             "policy": self.plan.policy,
             "reason": self.plan.reason,
@@ -189,6 +216,7 @@ class BatchServeConfig:
     form: str = "auto"         # bucket form: auto | csr | ell
     max_executors: int = 64    # LRU cap on cached jitted executors
     growth: float = 2.0        # bucket grid growth factor
+    fuse: bool = True          # fused epilogue inside the GCN executor
 
 
 @dataclasses.dataclass
@@ -260,11 +288,12 @@ class BatchServingEngine:
         """
         from repro.models.gnn import Graph, gcn_forward
 
-        policy = (scfg or BatchServeConfig()).policy
+        cfg = scfg or BatchServeConfig()
+        policy, fuse = cfg.policy, cfg.fuse
 
         def fwd(p, mat, h):
             g = Graph(adj=mat, n_nodes=mat.shape[0])
-            return gcn_forward(p, g, h, policy=policy)
+            return gcn_forward(p, g, h, policy=policy, fuse=fuse)
 
         # weights enter as the executor context (a jit argument), so the
         # cached per-bucket executables share one copy instead of each

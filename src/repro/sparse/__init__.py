@@ -15,15 +15,18 @@ duality (SpMM's backward is SDDMM and vice versa):
 See DESIGN.md "Public API" for the conversion table, operator
 semantics, gradient rules, and the legacy-surface deprecation timeline.
 """
+from repro.kernels.fused.epilogue import Epilogue
 from repro.sparse.matrix import FORMATS, SparseMatrix
-from repro.sparse.ops import available_paths, matmul, sample, sddmm
+from repro.sparse.ops import (available_paths, fused_graph_attention,
+                              matmul, sample, sddmm)
 from repro.sparse.plan import (PlanCache, plan_cache_stats,
                                reset_plan_cache_stats)
 
 spmm = matmul  # functional alias mirroring the legacy free function
 
 __all__ = [
-    "FORMATS", "SparseMatrix",
-    "available_paths", "matmul", "sample", "sddmm", "spmm",
+    "Epilogue", "FORMATS", "SparseMatrix",
+    "available_paths", "fused_graph_attention", "matmul", "sample",
+    "sddmm", "spmm",
     "PlanCache", "plan_cache_stats", "reset_plan_cache_stats",
 ]

@@ -38,12 +38,18 @@ from repro.core.formats import BlockCOO
 from repro.dispatch.dispatcher import Plan, record_plan
 from repro.dispatch.policy import (PATH_CSR, PATH_DENSE, PATH_ELL,
                                    PATH_SELL)
+from repro.kernels.fused.epilogue import (Epilogue, act_grad_from_out,
+                                          apply_epilogue)
 from repro.sparse import paths
 from repro.sparse.matrix import SparseMatrix, values_of, with_values
 
 # cfg: (path, use_kernel, interpret, bd_or_bk, out_dtype_str) — hashable,
 # resolved by the planner in ops.py before the differentiable call.
 Cfg = Tuple[str, bool, bool, Optional[int], Optional[str]]
+# epilogue cfg: Cfg + (Epilogue,) — the fused-SpMM variant.
+EpiCfg = Tuple[str, bool, bool, Optional[int], Optional[str], Epilogue]
+# attention cfg: (path, use_kernel, interpret, act, slope, out_dtype_str)
+AttnCfg = Tuple[str, bool, bool, str, float, Optional[str]]
 
 
 def _float0_like(x):
@@ -271,3 +277,265 @@ def _sddmm_bwd(cfg: Cfg, res, g):
 
 
 sddmm_values.defvjp(_sddmm_fwd, _sddmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused SpMM + epilogue: Y = act(A @ H + bias + residual)
+# ---------------------------------------------------------------------------
+
+
+def spmm_epilogue_exec(cfg: EpiCfg, a: SparseMatrix, h, bias, residual):
+    """Run one planned SpMM path with its epilogue fused.
+
+    The blocked kernel routes (Block-ELL / SELL-C-σ on the kernel path)
+    apply the epilogue to the VMEM accumulator at the flush; every other
+    route composes the reference SpMM with the elementwise tail, which
+    XLA fuses — semantics are identical either way.
+    """
+    path, use_kernel, interpret, bd, out_dtype, epi = cfg
+    kernelish = use_kernel or interpret
+    if kernelish and path == PATH_ELL and "ell" in a._forms:
+        from repro.kernels.fused.spmm import spmm_blockell_fused
+
+        ell = a._forms["ell"]
+        y = spmm_blockell_fused(
+            ell, paths.pad_rows(h, ell.shape[1]), epi, bias, residual,
+            bd=bd, out_dtype=out_dtype, use_kernel=use_kernel,
+            interpret=interpret)
+        return y[: a.shape[0]]
+    if kernelish and path == PATH_SELL and "sell" in a._forms:
+        from repro.kernels.fused.spmm import spmm_sell_fused
+
+        return spmm_sell_fused(
+            a._forms["sell"], h, epi, bias, residual, bd=bd,
+            out_dtype=out_dtype, use_kernel=use_kernel,
+            interpret=interpret)
+    y = spmm_exec((path, use_kernel, interpret, bd, out_dtype), a, h)
+    return apply_epilogue(y, epi, bias, residual)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def spmm_epilogue(cfg: EpiCfg, a: SparseMatrix, h, bias, residual):
+    return spmm_epilogue_exec(cfg, a, h, bias, residual)
+
+
+def _spmm_epilogue_fwd(cfg: EpiCfg, a: SparseMatrix, h, bias, residual):
+    out = spmm_epilogue_exec(cfg, a, h, bias, residual)
+    # the activation derivative is recoverable from the output sign
+    # (relu/leaky_relu preserve it), so `out` is the only extra residual
+    return out, (a, h, bias, residual, out)
+
+
+def _spmm_epilogue_bwd(cfg: EpiCfg, res, g):
+    path, use_kernel, interpret = cfg[0], cfg[1], cfg[2]
+    epi = cfg[5]
+    a, h, bias, residual, out = res
+    dz = g.astype(jnp.float32) * act_grad_from_out(
+        out.astype(jnp.float32), epi.act, epi.negative_slope)
+    dbias = None
+    if epi.has_bias:
+        # ops.matmul canonicalizes bias to [D], so the cotangent is the
+        # row reduction reshaped to the operand's (validated) shape
+        dbias = dz.sum(axis=0).reshape(jnp.shape(bias)).astype(bias.dtype)
+    dres = dz.astype(residual.dtype) if epi.has_residual else None
+    # past the elementwise tail the rules are exactly the SpMM duality
+    exec_cfg = (path, use_kernel, interpret, None, None)
+    dh = spmm_exec(exec_cfg, a.T, dz)
+    _record_vjp("spmm", path,
+                "vjp: dH = Aᵀ @ (ḡ ⊙ act') (fused-epilogue spmm backward)",
+                cfg)
+    form_name = form_read_by(a, path)
+    raw = sample_exec(exec_cfg, a, dz, h.T)
+    _record_vjp("sddmm", path,
+                "vjp: dA = pattern(A) ⊙ ((ḡ ⊙ act') @ Hᵀ) (fused-epilogue "
+                "spmm backward is sddmm)", cfg)
+    vals = values_of(form_name, a._forms[form_name])
+    da = _cotangent_like(a, form_name, _mask_structural(vals, raw))
+    return da, dh.astype(h.dtype), dbias, dres
+
+
+spmm_epilogue.defvjp(_spmm_epilogue_fwd, _spmm_epilogue_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused graph attention: Y = softmax_row(act(q kᵀ ⊙ pattern(A))) @ V
+# ---------------------------------------------------------------------------
+
+
+def _edge_act_grad(raw, act: str, slope: float):
+    """d act/ds at the raw sampled scores."""
+    if act == "identity":
+        return jnp.ones_like(raw)
+    if act == "relu":
+        return jnp.where(raw > 0, 1.0, 0.0)
+    if act == "leaky_relu":
+        return jnp.where(raw >= 0, 1.0, slope)
+    raise ValueError(f"unknown edge activation {act!r}")
+
+
+def _form_broadcast_rows(a: SparseMatrix, form_name: str, vec):
+    """Broadcast a per-logical-row vector onto a form's values layout."""
+    form = a._forms[form_name]
+    if form_name == "csr":
+        return vec[form[0]]
+    if form_name == "sell":
+        return vec[form.slot_rows]
+    bm = form.bm
+    padded = paths.pad_rows(vec, form.shape[0])
+    by_row = padded.reshape(-1, bm)  # [nbr, bm]
+    if form_name == "ell":
+        return by_row[:, None, :, None]   # -> [nbr, W, bm, bn] broadcast
+    return by_row[form.rows][:, :, None]  # coo: [nnzb, bm, 1]
+
+
+def _form_row_softmax(a: SparseMatrix, form_name: str, e, mask):
+    """Row softmax of masked scores ``e`` laid out like one form's values.
+
+    ``e`` is float32 with masked (structural-zero) entries already at
+    NEG_INF; the result carries exact zeros there.  Matches
+    ``models.gnn._segment_softmax`` (same 1e-12 denominator guard).
+    """
+    from repro.kernels.fused.attention import EPS
+
+    form = a._forms[form_name]
+    m = a.shape[0]
+    if form_name in ("csr", "sell"):
+        rows = form[0] if form_name == "csr" else form.slot_rows
+        mx = jax.ops.segment_max(e, rows, num_segments=m)
+        ex = jnp.where(mask, jnp.exp(e - mx[rows]), 0.0)
+        den = jax.ops.segment_sum(ex, rows, num_segments=m)
+        return ex / jnp.maximum(den[rows], EPS)
+    if form_name == "ell":
+        mx = e.max(axis=(1, 3))  # [nbr, bm]
+        ex = jnp.where(mask, jnp.exp(e - mx[:, None, :, None]), 0.0)
+        den = ex.sum(axis=(1, 3))
+        return ex / jnp.maximum(den, EPS)[:, None, :, None]
+    # coo: segment over block rows
+    nbr = form.shape[0] // form.bm
+    mx = jax.ops.segment_max(e.max(axis=2), form.rows, num_segments=nbr)
+    ex = jnp.where(mask, jnp.exp(e - mx[form.rows][:, :, None]), 0.0)
+    den = jax.ops.segment_sum(ex.sum(axis=2), form.rows, num_segments=nbr)
+    return ex / jnp.maximum(den[form.rows][:, :, None], EPS)
+
+
+def fused_attention_exec(cfg: AttnCfg, a: SparseMatrix, q, k, v):
+    """One-pass SDDMM→edge-act→softmax→SpMM over A's structural nonzeros.
+
+    ``q``: [M, dk] and ``k``: [N, dk] score factors (scores = q @ kᵀ
+    sampled at A's pattern), ``v``: [N, D] values.  A's stored *values*
+    only contribute their nonzero pattern.
+    """
+    from repro.kernels.fused import attention as fat
+
+    path, use_kernel, interpret, act, slope, out_dtype = cfg
+    m = a.shape[0]
+    kt = k.T
+    if path == PATH_ELL:
+        if "ell" in a._forms:
+            y = fat.fused_attn_blockell(
+                a._forms["ell"], q, kt, v, act=act, slope=slope,
+                out_dtype=out_dtype, use_kernel=use_kernel,
+                interpret=interpret)
+            return y[:m]
+        coo = a._forms["coo"]
+        return fat.fused_attn_blockcoo_ref(
+            coo, paths.pad_rows(q, coo.shape[0]),
+            paths.pad_cols(kt, coo.shape[1]),
+            paths.pad_rows(v, coo.shape[1]),
+            act=act, slope=slope,
+            out_dtype=out_dtype or jnp.result_type(q.dtype, v.dtype))[:m]
+    if path == PATH_SELL:
+        if "sell" in a._forms:
+            return fat.fused_attn_sell(
+                a._forms["sell"], q, kt, v, act=act, slope=slope,
+                out_dtype=out_dtype, use_kernel=use_kernel,
+                interpret=interpret)
+        r, c, vals = a.form("csr")  # transposed sell: slot triplet
+        return fat.fused_attn_elements(r, c, vals, q, kt, v, m, act=act,
+                                       slope=slope, out_dtype=out_dtype)
+    if path == PATH_CSR:
+        r, c, vals = a.form("csr")
+        return fat.fused_attn_elements(r, c, vals, q, kt, v, m, act=act,
+                                       slope=slope, out_dtype=out_dtype)
+    if path == PATH_DENSE:
+        return fat.fused_attn_dense(a.densify(), q, kt, v, act=act,
+                                    slope=slope, out_dtype=out_dtype)
+    raise ValueError(f"unknown fused-attention path {path!r}")
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_attention(cfg: AttnCfg, a: SparseMatrix, q, k, v):
+    return fused_attention_exec(cfg, a, q, k, v)
+
+
+def _fused_attention_fwd(cfg: AttnCfg, a: SparseMatrix, q, k, v):
+    out = fused_attention_exec(cfg, a, q, k, v)
+    return out, (a, q, k, v, out)
+
+
+def _fused_attention_bwd(cfg: AttnCfg, res, g):
+    """The fused pipeline's backward, assembled from the kernel duality.
+
+    With α = softmax(act(e)) and O = α V:
+
+      * dV = αᵀ ḡ                      — SpMM on the transposed α;
+      * dα = ḡ Vᵀ sampled at pattern   — SDDMM;
+      * softmax JVP trick: de' = α ⊙ (dα - rowdot), where
+        rowdot_i = ḡ_i · O_i re-uses the forward output instead of a
+        second α-weighted reduction;
+      * de = de' ⊙ act'(e); then dq = (P ⊙ de) k and dk = (P ⊙ de)ᵀ q
+        — the SDDMM backward's two SpMMs.
+
+    α and the raw scores are recomputed in the forward layout (one
+    SDDMM + a row softmax), so the forward never has to spill them.
+    """
+    path, use_kernel, interpret, act, slope, _ = cfg
+    a, q, k, v, out = res
+    exec_cfg = (path, use_kernel, interpret, None, None)
+    form_name = form_read_by(a, path)
+    form = a._forms[form_name]
+    vals = values_of(form_name, form)
+    mask = vals != 0
+
+    from repro.kernels.fused.attention import NEG_INF
+    from repro.kernels.fused.epilogue import apply_act
+
+    raw = sample_exec(exec_cfg, a, q, k.T).astype(jnp.float32)
+    _record_vjp("sddmm", path,
+                "vjp: recompute e = act(q kᵀ) at pattern (fused attn "
+                "backward)", cfg)
+    e = jnp.where(mask, apply_act(raw, act, slope), NEG_INF)
+    alpha = _form_row_softmax(a, form_name, e, mask)
+
+    dalpha = sample_exec(exec_cfg, a, g, v.T).astype(jnp.float32)
+    _record_vjp("sddmm", path,
+                "vjp: dα = ḡ Vᵀ at pattern (fused attn backward is sddmm)",
+                cfg)
+    rowdot = (g.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    rd = _form_broadcast_rows(a, form_name, rowdot)
+    de = alpha * (dalpha - rd) * _edge_act_grad(raw, act, slope)
+    de = jnp.where(mask, de, 0.0)
+
+    de_mat = SparseMatrix(
+        {form_name: with_values(form_name, form, de.astype(vals.dtype))},
+        a.shape, a.stats, cache=a._cache)
+    dq = spmm_exec(exec_cfg, de_mat, k)
+    _record_vjp("spmm", path,
+                "vjp: dq = (P ⊙ de) k (fused attn backward is spmm)", cfg)
+    dk = spmm_exec(exec_cfg, de_mat.T, q)
+    _record_vjp("spmm", path,
+                "vjp: dk = (P ⊙ de)ᵀ q (fused attn backward is spmm)", cfg)
+    alpha_mat = SparseMatrix(
+        {form_name: with_values(form_name, form,
+                                alpha.astype(vals.dtype))},
+        a.shape, a.stats, cache=a._cache)
+    dv = spmm_exec(exec_cfg, alpha_mat.T, g)
+    _record_vjp("spmm", path,
+                "vjp: dV = αᵀ ḡ (fused attn backward is spmm)", cfg)
+    # attention reads only A's nonzero *pattern*; its stored values get
+    # zero cotangent (structure is not differentiable)
+    da = _cotangent_like(a, form_name, jnp.zeros_like(vals))
+    return da, dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+fused_attention.defvjp(_fused_attention_fwd, _fused_attention_bwd)

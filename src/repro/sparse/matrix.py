@@ -500,6 +500,19 @@ class SparseMatrix:
 
         return ops.matmul(self, h)
 
+    def matmul(self, h, *, epilogue=None, bias=None, residual=None, **kw):
+        """``A @ H`` with an optional fused epilogue.
+
+        ``A.matmul(h, epilogue="relu", bias=b)`` computes
+        ``relu(A @ h + b)`` with the elementwise tail fused into the
+        SpMM (applied to the kernel accumulator before the output
+        flush).  See :func:`repro.sparse.ops.matmul`.
+        """
+        from repro.sparse import ops
+
+        return ops.matmul(self, h, epilogue=epilogue, bias=bias,
+                          residual=residual, **kw)
+
     def __rmatmul__(self, x):
         from repro.sparse import ops
 

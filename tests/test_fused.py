@@ -1,0 +1,533 @@
+"""Fused sparse pipelines: SpMM+epilogue and one-pass graph attention.
+
+Parity contract: the fused ops must match the unfused compositions (and
+the dense autodiff oracle) at 1e-5, forward and gradient, at sparsity
+0.5 / 0.9 / 0.99 across the ell / sell / csr paths; the online-softmax
+two-sweep must match ``_segment_softmax``; and fusion must not add jit
+retraces nor E-length intermediates to the blocked path's jaxpr.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.dispatch import (AutotuneCache, PATH_FUSED_ATTN, calibrate,
+                            clear_log, dispatch_log, last_plan,
+                            plan_fused_attention)
+from repro.models.gnn import _segment_softmax
+from repro.sparse import SparseMatrix, fused_graph_attention, matmul, sample
+
+SPARSITIES = (0.5, 0.9, 0.99)
+PATHS3 = ("ell", "sell", "csr")
+
+
+def _rand_adj(rng, n, sparsity):
+    dense = np.where(rng.random((n, n)) < (1.0 - sparsity),
+                     rng.normal(size=(n, n)), 0.0).astype(np.float32)
+    # keep at least one edge so segment softmax has work to do
+    if not dense.any():
+        dense[0, 1] = 1.0
+    return dense
+
+
+def _matrix(dense, block=(16, 16)):
+    return SparseMatrix.from_dense(dense, formats=("ell", "sell", "csr"),
+                                   block=block)
+
+
+def _attn_inputs(rng, n, d=8):
+    q = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(n, 2)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    return q, k, v
+
+
+def _dense_attention(dense, q, k, v, slope=0.2):
+    """Dense oracle of the whole pipeline (jnp, fully differentiable)."""
+    s = q @ k.T
+    mask = jnp.asarray(dense != 0)
+    e = jnp.where(s >= 0, s, slope * s)
+    e = jnp.where(mask, e, -1e30)
+    mx = e.max(axis=1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(e - mx), 0.0)
+    den = jnp.maximum(p.sum(axis=1, keepdims=True), 1e-12)
+    return (p / den) @ v
+
+
+# ---------------------------------------------------------------------------
+# SpMM + epilogue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", SPARSITIES)
+@pytest.mark.parametrize("path", PATHS3)
+def test_epilogue_matmul_matches_unfused(rng, path, sparsity):
+    n, d = 64, 8
+    dense = _rand_adj(rng, n, sparsity)
+    a = _matrix(dense)
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    fused = matmul(a, h, policy=path, epilogue="relu", bias=b, residual=r)
+    unfused = jax.nn.relu(matmul(a, h, policy=path) + b + r)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+    oracle = jax.nn.relu(jnp.asarray(dense) @ h + b + r)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("sparsity", SPARSITIES)
+@pytest.mark.parametrize("path", PATHS3)
+def test_epilogue_grads_match_dense_autodiff(rng, path, sparsity):
+    n, d = 48, 8
+    dense = _rand_adj(rng, n, sparsity)
+    a = _matrix(dense)
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+
+    def fused(h, b, r):
+        y = matmul(a, h, policy=path, epilogue="relu", bias=b, residual=r)
+        return (y * w).sum()
+
+    def oracle(h, b, r):
+        return (jax.nn.relu(jnp.asarray(dense) @ h + b + r) * w).sum()
+
+    gf = jax.grad(fused, argnums=(0, 1, 2))(h, b, r)
+    go = jax.grad(oracle, argnums=(0, 1, 2))(h, b, r)
+    for name, x, y in zip(("dh", "dbias", "dresidual"), gf, go):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("path", ("ell", "sell"))
+def test_epilogue_kernel_interpret_parity(rng, path):
+    """The in-register epilogue kernels == reference composition."""
+    n, d = 64, 16
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense)
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    kernel = matmul(a, h, policy=path, epilogue="leaky_relu", bias=b,
+                    residual=r, interpret=True)
+    ref = matmul(a, h, policy=path, epilogue="leaky_relu", bias=b,
+                 residual=r, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_epilogue_sell_kernel_restores_pruned_rows(rng):
+    """Rows with no nonzeros still owe act(bias + residual): the sell
+    kernel never computes them, the epilogue gather re-inserts them."""
+    n, d = 64, 16
+    dense = np.zeros((n, n), np.float32)
+    dense[: n // 4] = _rand_adj(rng, n, 0.5)[: n // 4]  # 3/4 rows empty
+    a = SparseMatrix.from_dense(dense, formats=("sell",), block=(8, 8))
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    out = matmul(a, h, policy="sell", epilogue="relu", bias=b, residual=r,
+                 interpret=True)
+    oracle = jax.nn.relu(jnp.asarray(dense) @ h + b + r)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_epilogue_scalar_and_python_bias(rng):
+    """Scalar / raw-Python bias is canonicalized to [D]: works on the
+    kernel routes and is differentiable (regression: reshape crash)."""
+    n, d = 32, 8
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense, block=(8, 8))
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    oracle = jax.nn.relu(jnp.asarray(dense) @ h + 0.5)
+    for path in ("ell", "sell"):
+        out = matmul(a, h, policy=path, epilogue="relu", bias=0.5,
+                     interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=1e-4, atol=1e-4)
+    g = jax.grad(lambda b: matmul(a, h, policy="csr", epilogue="relu",
+                                  bias=b).sum())(jnp.float32(0.5))
+    assert np.shape(np.asarray(g)) == ()
+    with pytest.raises(ValueError, match="bias"):
+        matmul(a, h, policy="csr", epilogue="relu",
+               bias=jnp.zeros((1, d)))
+    with pytest.raises(ValueError, match="residual"):
+        matmul(a, h, policy="csr", epilogue="relu",
+               residual=jnp.zeros((n + 1, d)))
+
+
+def test_epilogue_plan_recorded_as_fused(rng):
+    dense = _rand_adj(rng, 32, 0.9)
+    a = _matrix(dense)
+    h = jnp.asarray(rng.normal(size=(32, 4)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(4,)).astype(np.float32))
+    clear_log()
+    matmul(a, h, policy="csr", epilogue="relu", bias=b)
+    plan = last_plan("spmm")
+    assert plan.fused == "relu+bias"
+
+
+# ---------------------------------------------------------------------------
+# Fused graph attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", SPARSITIES)
+@pytest.mark.parametrize("path", PATHS3)
+def test_fused_attention_matches_unfused_composition(rng, path, sparsity):
+    n = 64
+    dense = _rand_adj(rng, n, sparsity)
+    a = _matrix(dense)
+    q, k, v = _attn_inputs(rng, n)
+
+    fused = fused_graph_attention(a, q, k, v, policy=path)
+
+    patt = a.to("csr").pattern()
+    row_ids = patt.form("csr")[0]
+    e = sample(patt, q, k.T, policy="csr").data
+    e = jax.nn.leaky_relu(e, 0.2)
+    alpha = _segment_softmax(e, row_ids, n)
+    unfused = matmul(patt.with_data(alpha), v, policy="csr")
+
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("sparsity", SPARSITIES)
+@pytest.mark.parametrize("path", PATHS3)
+def test_fused_attention_grads_match_dense_autodiff(rng, path, sparsity):
+    n = 48
+    dense = _rand_adj(rng, n, sparsity)
+    a = _matrix(dense)
+    q, k, v = _attn_inputs(rng, n)
+    w = jnp.asarray(rng.normal(size=(n, v.shape[1])).astype(np.float32))
+
+    def fused(q, k, v):
+        return (fused_graph_attention(a, q, k, v, policy=path) * w).sum()
+
+    def oracle(q, k, v):
+        return (_dense_attention(dense, q, k, v) * w).sum()
+
+    gf = jax.grad(fused, argnums=(0, 1, 2))(q, k, v)
+    go = jax.grad(oracle, argnums=(0, 1, 2))(q, k, v)
+    for name, x, y in zip(("dq", "dk", "dv"), gf, go):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("path", ("ell", "sell"))
+def test_fused_attention_kernel_interpret_parity(rng, path):
+    """Flash-statistics kernels == two-sweep jnp references."""
+    n = 64
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense)
+    q, k, v = _attn_inputs(rng, n, d=16)
+    kernel = fused_graph_attention(a, q, k, v, policy=path, interpret=True)
+    ref = fused_graph_attention(a, q, k, v, policy=path, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(kernel), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_fused_attention_empty_rows_are_zero(rng):
+    """Edge-less rows aggregate nothing (matching segment-softmax/SpMM)."""
+    n = 32
+    dense = _rand_adj(rng, n, 0.8)
+    dense[5] = 0.0
+    dense[17] = 0.0
+    a = _matrix(dense, block=(8, 8))
+    q, k, v = _attn_inputs(rng, n)
+    for path in PATHS3 + ("dense",):
+        out = np.asarray(fused_graph_attention(a, q, k, v, policy=path))
+        np.testing.assert_allclose(out[5], 0.0, atol=1e-6)
+        np.testing.assert_allclose(out[17], 0.0, atol=1e-6)
+
+
+def test_online_softmax_two_sweep_matches_segment_softmax(rng):
+    """The blocked two-sweep (what the kernels stream) == the E-length
+    segment softmax the unfused path runs, via identical-score inputs."""
+    from repro.kernels.fused.attention import fused_attn_blockell_ref
+
+    n = 64
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense)
+    q, k, v = _attn_inputs(rng, n)
+    # identity edge-act isolates the softmax algebra itself
+    blocked = fused_attn_blockell_ref(a.form("ell"), q, k.T, v,
+                                      act="identity")[:n]
+    patt = a.to("csr").pattern()
+    row_ids, col_ids, _ = patt.form("csr")
+    scores = (q @ k.T)[row_ids, col_ids]
+    alpha = _segment_softmax(scores, row_ids, n)
+    seg = matmul(patt.with_data(alpha), v, policy="csr")
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(seg),
+                               rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch integration
+# ---------------------------------------------------------------------------
+
+
+def test_fused_attention_single_plan_in_dispatch_log(rng):
+    n = 48
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense)
+    q, k, v = _attn_inputs(rng, n)
+    clear_log()
+    fused_graph_attention(a, q, k, v, policy="auto")
+    plans = dispatch_log()
+    assert len(plans) == 1, [p.describe() for p in plans]
+    assert plans[0].op == PATH_FUSED_ATTN
+    assert plans[0].fused == "attn"
+    assert plans[0].path in ("ell", "sell", "csr", "dense")
+
+
+def test_plan_fused_attention_prices_one_stream(rng):
+    """The fused cost entry: each path priced at one topology stream of
+    combined width k + d (vs three separate streams unfused)."""
+    dense = _rand_adj(rng, 64, 0.9)
+    a = _matrix(dense)
+    plan = plan_fused_attention(a.stats, 2, 16, policy="auto")
+    assert plan.op == PATH_FUSED_ATTN and plan.fused == "attn"
+    # one-stream pricing at combined width == spmm costs at k + d
+    from repro.dispatch import DEFAULT_COST_MODEL
+
+    spmm_costs = DEFAULT_COST_MODEL.spmm_costs(a.stats, 2 + 16)
+    for p, c in plan.costs.items():
+        assert c == pytest.approx(spmm_costs[p])
+
+
+def test_fused_attention_vjp_duality_in_dispatch_log(rng):
+    """Backward reuses the SpMM/SDDMM duality — visible in the log."""
+    n = 32
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense)
+    q, k, v = _attn_inputs(rng, n)
+    clear_log()
+    jax.grad(lambda v: fused_graph_attention(a, q, k, v,
+                                             policy="csr").sum())(v)
+    vjp = [(p.op, p.policy) for p in dispatch_log() if p.policy == "vjp"]
+    ops = [op for op, _ in vjp]
+    assert ops.count("sddmm") == 2, vjp  # score recompute + dα
+    assert ops.count("spmm") == 3, vjp   # dq, dk, dV
+
+
+def test_fusion_adds_no_retraces(rng):
+    """Trace-count pin: the fused layer retraces once, then replays."""
+    n = 48
+    dense = _rand_adj(rng, n, 0.9)
+    a = _matrix(dense)
+    traces = []
+
+    @jax.jit
+    def layer(q, k, v, h, b):
+        traces.append(1)
+        y = fused_graph_attention(a, q, k, v, policy="ell")
+        return matmul(a, y + 0 * h, policy="ell", epilogue="relu", bias=b)
+
+    q, k, v = _attn_inputs(rng, n)
+    b = jnp.asarray(rng.normal(size=(v.shape[1],)).astype(np.float32))
+    layer(q, k, v, v, b)
+    layer(q + 1, k + 1, v + 1, v, b)
+    layer(q * 2, k, v, v, b)
+    assert len(traces) == 1, "fused pipeline must not retrace per call"
+
+
+def test_gat_forward_fused_one_dispatch_per_layer(rng):
+    """gat_forward(fuse=True): exactly one plan per layer, and the
+    blocked path's jaxpr carries no E-length intermediate."""
+    from repro.configs.paper_gnn import SMOKE_CONFIG as GCFG
+    from repro.data.pipeline import random_graph
+    from repro.models.gnn import build_graph, gat_forward, init_gat
+
+    adj = random_graph(48, avg_degree=4, seed=1, clustered=False)
+    graph = build_graph(adj, GCFG)
+    params = init_gat(jax.random.PRNGKey(0), GCFG)
+    x = jnp.asarray(rng.normal(size=(graph.n_nodes, GCFG.in_features))
+                    .astype(np.float32))
+
+    clear_log()
+    out = gat_forward(params, graph, x, policy="ell", fuse=True)
+    assert out.shape == (graph.n_nodes, GCFG.n_classes)
+    assert np.isfinite(np.asarray(out)).all()
+    plans = dispatch_log()
+    assert len(plans) == GCFG.n_layers, [p.describe() for p in plans]
+    assert all(p.op == PATH_FUSED_ATTN for p in plans)
+
+    # no E-length (edge-count) array anywhere in the traced program
+    from benchmarks.bench_fused import count_length_intermediates
+
+    nnz = graph.adj.stats.nnz
+    jaxpr = jax.make_jaxpr(
+        lambda x: gat_forward(params, graph, x, policy="ell", fuse=True))(x)
+    assert count_length_intermediates(jaxpr, nnz) == 0
+
+
+@pytest.mark.parametrize("sparsity", (0.9, 0.99))
+def test_gat_forward_fused_matches_unfused(rng, sparsity):
+    from repro.configs.paper_gnn import SMOKE_CONFIG as GCFG
+    from repro.models.gnn import Graph, gat_forward, init_gat
+
+    n = 48
+    dense = _rand_adj(rng, n, sparsity)
+    graph = Graph(adj=_matrix(np.abs(dense)), n_nodes=n)
+    params = init_gat(jax.random.PRNGKey(1), GCFG)
+    x = jnp.asarray(rng.normal(size=(n, GCFG.in_features))
+                    .astype(np.float32))
+    fused = gat_forward(params, graph, x, fuse=True)
+    unfused = gat_forward(params, graph, x, fuse=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_gcn_forward_fused_matches_unfused_with_bias(rng):
+    from repro.configs.paper_gnn import SMOKE_CONFIG as GCFG
+    from repro.data.pipeline import random_graph
+    from repro.models.gnn import build_graph, gcn_forward, init_gcn
+
+    adj = random_graph(48, avg_degree=4, seed=3, clustered=False)
+    graph = build_graph(adj, GCFG)
+    params = init_gcn(jax.random.PRNGKey(0), GCFG, bias=True)
+    params["b"] = [b + 0.1 * i for i, b in enumerate(params["b"])]
+    x = jnp.asarray(rng.normal(size=(graph.n_nodes, GCFG.in_features))
+                    .astype(np.float32))
+    fused = gcn_forward(params, graph, x, policy="auto", fuse=True)
+    unfused = gcn_forward(params, graph, x, policy="auto", fuse=False)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=1e-5, atol=1e-5)
+
+    # gradients flow through the fused epilogue into the bias params
+    def loss(p):
+        return gcn_forward(p, graph, x, policy="auto", fuse=True).sum()
+
+    g = jax.grad(loss)(params)
+    assert any(float(jnp.abs(b).sum()) > 0 for b in g["b"])
+
+
+def test_gat_forward_unfused_consults_dispatcher(rng):
+    """The unfused oracle now routes through the cost model and logs."""
+    from repro.configs.paper_gnn import SMOKE_CONFIG as GCFG
+    from repro.data.pipeline import random_graph
+    from repro.models.gnn import build_graph, gat_forward, init_gat
+
+    adj = random_graph(48, avg_degree=4, seed=1, clustered=False)
+    graph = build_graph(adj, GCFG)
+    params = init_gat(jax.random.PRNGKey(0), GCFG)
+    x = jnp.asarray(rng.normal(size=(graph.n_nodes, GCFG.in_features))
+                    .astype(np.float32))
+    clear_log()
+    gat_forward(params, graph, x, fuse=False)
+    plans = [p for p in dispatch_log() if p.policy != "vjp"]
+    # sddmm + spmm per layer, each carrying a cost-model decision
+    assert len(plans) == 2 * GCFG.n_layers
+    assert all(p.policy == "auto" and p.costs is not None for p in plans)
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def test_gnn_serving_engine_plans_fused_gat(rng):
+    from repro.configs.paper_gnn import SMOKE_CONFIG as GCFG
+    from repro.data.pipeline import random_graph
+    from repro.models.gnn import build_graph, init_gat
+    from repro.serve.engine import GNNServeConfig, GNNServingEngine
+
+    adj = random_graph(48, avg_degree=4, seed=2, clustered=False)
+    graph = build_graph(adj, GCFG)
+    params = init_gat(jax.random.PRNGKey(0), GCFG)
+    eng = GNNServingEngine(params, graph,
+                           GNNServeConfig(model="gat", fuse=True))
+    x = rng.normal(size=(graph.n_nodes, GCFG.in_features)) \
+        .astype(np.float32)
+    out = eng.infer(x)
+    assert out.shape == (graph.n_nodes, GCFG.n_classes)
+    rep = eng.dispatch_report()
+    assert rep["model"] == "gat" and rep["fused"] is True
+    assert rep["plan_op"] == PATH_FUSED_ATTN
+
+
+# ---------------------------------------------------------------------------
+# Calibration
+# ---------------------------------------------------------------------------
+
+
+def test_calibrate_returns_positive_constants():
+    cm = calibrate(n=128, d=16, densities=(0.3, 0.02), iters=1)
+    assert cm.c_ell > 0 and cm.c_sell > 0 and cm.c_csr > 0
+    assert cm.c_dense == 1.0
+
+
+def test_autotune_cache_roundtrips_calibration(tmp_path):
+    from repro.dispatch import CostModel
+    from repro.dispatch.autotune import Measurement
+
+    cache = AutotuneCache()
+    cache.cost_model = CostModel(c_ell=2.5, c_csr=31.0, c_sell=7.5)
+    cache.put(("spmm", 64, 64, 16, "float32", 1), Measurement(
+        path="ell", timings_us={"ell": 10.0, "csr": 20.0}))
+    p = tmp_path / "autotune.json"
+    cache.save(str(p))
+    fresh = AutotuneCache()
+    fresh.load(str(p))
+    assert fresh.cost_model == cache.cost_model
+    hit = fresh.get(("spmm", 64, 64, 16, "float32", 1))
+    assert hit is not None and hit.path == "ell"
+
+
+def test_autotune_cache_loads_legacy_payload(tmp_path):
+    """Pre-calibration caches were a bare entry list; still loadable."""
+    import json
+
+    p = tmp_path / "legacy.json"
+    p.write_text(json.dumps([
+        {"key": ["spmm", 8, 8, 4, "float32", 0], "path": "csr",
+         "timings_us": {"csr": 5.0}},
+    ]))
+    cache = AutotuneCache()
+    cache.load(str(p))
+    assert cache.cost_model is None
+    assert cache.get(("spmm", 8, 8, 4, "float32", 0)).path == "csr"
+
+
+@pytest.mark.slow
+def test_fused_kernels_mxu_shaped_parity(rng):
+    """Interpret-mode parity at MXU-shaped sizes (nightly kernel job)."""
+    n, d = 512, 256
+    dense = _rand_adj(rng, n, 0.98)
+    a = SparseMatrix.from_dense(dense, formats=("ell", "sell", "csr"),
+                                block=(64, 64))
+    h = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(d,)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    oracle = jax.nn.relu(jnp.asarray(dense) @ h + b + r)
+    for path in ("ell", "sell"):
+        out = matmul(a, h, policy=path, epilogue="relu", bias=b,
+                     residual=r, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oracle),
+                                   rtol=5e-4, atol=5e-4)
+    q, k, v = _attn_inputs(rng, n, d=128)
+    att_oracle = _dense_attention(dense, q, k, v)
+    for path in ("ell", "sell"):
+        out = fused_graph_attention(a, q, k, v, policy=path,
+                                    interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(att_oracle),
+                                   rtol=5e-4, atol=5e-4)
+
+
+def test_epilogue_spec_is_hashable_plan_key():
+    from repro.kernels.fused import Epilogue, normalize_epilogue
+
+    e1 = normalize_epilogue("relu", jnp.zeros((4,)), None)
+    e2 = normalize_epilogue("relu", jnp.ones((4,)), None)
+    assert e1 == e2 and hash(e1) == hash(e2)  # arrays stay out of the key
+    assert e1.has_bias and not e1.has_residual
+    assert isinstance(e1, Epilogue)
+    with pytest.raises(ValueError):
+        Epilogue(act="tanh")
