@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
                        writes BENCH_serve.json)
   bench_fused        — fused-vs-unfused GCN epilogue + GAT attention
                        sweep (also writes BENCH_fused.json)
+  bench_corpus       — structured-matrix corpus (uniform/powerlaw/rmat/
+                       banded/block_pruned) over every execution path +
+                       the SpMV lane (also writes BENCH_corpus.json)
 
 ``python -m benchmarks.run [--full] [--policy auto] [--json out.json]``
 (quick mode by default so the CPU container finishes in minutes; --full
@@ -52,9 +55,9 @@ def main() -> None:
     args = ap.parse_args()
     quick = not args.full
 
-    from benchmarks import (bench_crossover, bench_dense_limit,
-                            bench_footprint, bench_fused, bench_sddmm,
-                            bench_serve, bench_spmm, common)
+    from benchmarks import (bench_corpus, bench_crossover,
+                            bench_dense_limit, bench_footprint, bench_fused,
+                            bench_sddmm, bench_serve, bench_spmm, common)
     from repro.sparse import plan_cache_stats, reset_plan_cache_stats
     benches = {
         "dense_limit": bench_dense_limit.run,
@@ -64,8 +67,9 @@ def main() -> None:
         "crossover": bench_crossover.run,
         "serve": bench_serve.run,
         "fused": bench_fused.run,
+        "corpus": bench_corpus.run,
     }
-    dispatched = {"spmm", "sddmm", "crossover", "serve", "fused"}
+    dispatched = {"spmm", "sddmm", "crossover", "serve", "fused", "corpus"}
     api_axis = {"spmm", "sddmm"}
     only = set(args.only.split(",")) if args.only else None
     if only:

@@ -1,0 +1,6 @@
+"""DLMC-style synthetic matrix corpus (see ``generators``)."""
+from repro.corpus.generators import (CorpusSpec, FAMILIES, default_corpus,
+                                     make_dense, make_matrix)
+
+__all__ = ["CorpusSpec", "FAMILIES", "default_corpus", "make_dense",
+           "make_matrix"]

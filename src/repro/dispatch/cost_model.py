@@ -50,11 +50,17 @@ class CostModel:
     c_sell: float = 9.0
 
     def spmm_costs(self, stats: MatrixStats, d: int) -> Dict[str, float]:
-        """Relative cost of Y[M,D] = A[M,N] @ H[N,D] per path."""
+        """Relative cost of Y[M,D] = A[M,N] @ H[N,D] per path.
+
+        The ELL path is priced off ``ell_stream_estimate`` — stored
+        volume floored by M x max_row_nnz — so a hub-heavy matrix whose
+        global density looks streaming-friendly is still charged for
+        the width its heaviest row forces on every row.
+        """
         d = max(int(d), 1)
         return {
             PATH_DENSE: self.c_dense * stats.dense_elements * d,
-            PATH_ELL: self.c_ell * stats.stored_elements * d,
+            PATH_ELL: self.c_ell * stats.ell_stream_estimate * d,
             PATH_SELL: self._sell_cost(stats, d),
             PATH_CSR: self.c_csr * stats.nnz * d,
         }
@@ -83,7 +89,7 @@ class CostModel:
         inner = max(int(k), 1) + max(int(d), 1)
         return {
             PATH_DENSE: self.c_dense * stats.dense_elements * inner,
-            PATH_ELL: self.c_ell * stats.stored_elements * inner,
+            PATH_ELL: self.c_ell * stats.ell_stream_estimate * inner,
             PATH_SELL: self._sell_cost(stats, inner),
             PATH_CSR: self.c_csr * stats.nnz * inner,
         }

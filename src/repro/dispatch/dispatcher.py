@@ -137,6 +137,29 @@ def plan_spmm(
                  interpret=interpret, candidates=candidates)
 
 
+def plan_spmv(
+    stats: MatrixStats,
+    *,
+    policy: str = POLICY_AUTO,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    candidates: Optional[Tuple[str, ...]] = None,
+) -> Plan:
+    """Plan y = A @ x for a vector operand (SpMM at d = 1).
+
+    The cost surface is the SpMM one evaluated at unit feature width —
+    with no D to amortize the stream over, the scalar paths close most
+    of their per-element disadvantage and hyper-sparse operands tip to
+    csr much earlier.  A dedicated op tag keeps the dispatch log honest
+    about which front-end ran.
+    """
+    return _plan("spmv", cost_model.spmm_costs(stats, 1), stats,
+                 policy=policy, config=config, use_kernel=use_kernel,
+                 interpret=interpret, candidates=candidates)
+
+
 def plan_sddmm(
     stats: MatrixStats,
     k: int,

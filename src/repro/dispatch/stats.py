@@ -14,13 +14,36 @@ advantage the streaming path has over the scalar CSR path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.core.formats import (BlockCOO, BlockELL, CSR,
+from repro.core.formats import (BlockCOO, BlockELL, CSR, _cdiv,
                                 blockell_stream_elements,
                                 sell_slot_volume)
+
+
+def _structure_features(shape: Tuple[int, int], rows: np.ndarray,
+                        cols: np.ndarray, row_nnz: np.ndarray
+                        ) -> Dict[str, float]:
+    """Row-skew and band-locality features from element coordinates.
+
+    ``bandwidth_frac`` is the 95th percentile of the *normalized*
+    diagonal distance |i/(m-1) - j/(n-1)|: ~0 for banded/diagonal
+    matrices, ~0.78 for uniform-random structure (the p95 of |U - V|
+    for independent uniforms).  All features are 0 for an empty matrix.
+    """
+    if len(rows) == 0:
+        return {"row_nnz_mean": 0.0, "row_nnz_cv": 0.0, "max_row_nnz": 0,
+                "bandwidth_frac": 0.0}
+    m, n = shape
+    mean = float(row_nnz.mean())
+    cv = float(row_nnz.std() / mean) if mean > 0 else 0.0
+    r_norm = rows.astype(np.float64) / max(m - 1, 1)
+    c_norm = cols.astype(np.float64) / max(n - 1, 1)
+    band = float(np.percentile(np.abs(r_norm - c_norm), 95))
+    return {"row_nnz_mean": mean, "row_nnz_cv": cv,
+            "max_row_nnz": int(row_nnz.max()), "bandwidth_frac": band}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -38,6 +61,11 @@ class MatrixStats:
     # slots the SELL-C-σ packing would stream (real + slice padding) at
     # the default (C, σ); 0 = not measured (sell path unpriceable)
     sell_stored_elements: int = 0
+    # -- structure features (0 = not measured, e.g. transposed stats) --
+    row_nnz_mean: float = 0.0     # nnz per logical row
+    row_nnz_cv: float = 0.0       # row-nnz coefficient of variation
+    max_row_nnz: int = 0          # heaviest row (hub detection)
+    bandwidth_frac: float = 0.0   # p95 normalized diagonal distance
 
     @property
     def dense_elements(self) -> int:
@@ -58,7 +86,53 @@ class MatrixStats:
             return float("inf")
         return self.stored_elements / self.nnz
 
+    @property
+    def ell_stream_estimate(self) -> int:
+        """Elements the ELL-style streaming path must move, floored by
+        row structure: every row streams at least the heaviest row's
+        slot count (the global width is >= max_row_nnz / block_n slots
+        per block-row), so a single hub row prices the whole layout.
+        Falls back to ``stored_elements`` when row structure was never
+        measured (``max_row_nnz == 0``)."""
+        if self.max_row_nnz <= 0:
+            return self.stored_elements
+        m_pad = self.n_block_rows * max(self.block_m, 1)
+        return max(self.stored_elements, m_pad * self.max_row_nnz)
+
     # -- constructors -------------------------------------------------------
+
+    @staticmethod
+    def from_coords(shape: Tuple[int, int], rows: np.ndarray,
+                    cols: np.ndarray, block_m: int = 1, block_n: int = 1,
+                    nnz: Optional[int] = None) -> "MatrixStats":
+        """Blocked-layout stats from element coordinates (no blocks
+        built).  This is the one shared granularity: every constructor
+        below reduces to it, so stats of the same matrix agree across
+        storage forms."""
+        m, n = int(shape[0]), int(shape[1])
+        rows = np.asarray(rows, dtype=np.int64).reshape(-1)
+        cols = np.asarray(cols, dtype=np.int64).reshape(-1)
+        if nnz is None:
+            nnz = len(rows)
+        bm, bn = int(block_m), int(block_n)
+        nbr, nbc = _cdiv(m, bm), _cdiv(n, bn)
+        bids = (rows // bm) * nbc + cols // bn
+        ub = np.unique(bids)
+        counts = np.bincount((ub // nbc).astype(np.int64), minlength=nbr)
+        width = max(int(counts.max()) if len(counts) else 0, 1)
+        row_nnz = np.bincount(rows, minlength=m)
+        return MatrixStats(
+            shape=(nbr * bm, nbc * bn),
+            nnz=int(nnz),
+            stored_elements=int(nbr * width * bm * bn),
+            block_m=bm,
+            block_n=bn,
+            n_block_rows=nbr,
+            ell_width=width,
+            occupancy=len(ub) / max(nbr * width, 1),
+            sell_stored_elements=sell_slot_volume(row_nnz),
+            **_structure_features((m, n), rows, cols, row_nnz),
+        )
 
     @staticmethod
     def from_blockell(ell: BlockELL, nnz: Optional[int] = None
@@ -68,8 +142,12 @@ class MatrixStats:
         blocks = np.asarray(ell.blocks)  # [nbr, W, bm, bn]
         if nnz is None:
             nnz = int(np.count_nonzero(blocks))
-        # element-row nonzero counts: sum over (slot, block-col) axes
-        row_nnz = np.count_nonzero(blocks, axis=(1, 3)).reshape(-1)
+        # global element coordinates of the stored nonzeros
+        br, slot, i, j = np.nonzero(blocks)
+        grows = br.astype(np.int64) * ell.bm + i
+        gcols = (np.asarray(ell.indices, dtype=np.int64)[br, slot] * ell.bn
+                 + j)
+        row_nnz = np.bincount(grows, minlength=ell.shape[0])
         nbr, w = ell.n_block_rows, ell.ell_width
         return MatrixStats(
             shape=ell.shape,
@@ -82,6 +160,7 @@ class MatrixStats:
             ell_width=w,
             occupancy=ell.occupancy(),
             sell_stored_elements=sell_slot_volume(row_nnz),
+            **_structure_features(ell.shape, grows, gcols, row_nnz),
         )
 
     @staticmethod
@@ -92,8 +171,9 @@ class MatrixStats:
             nnz = int(np.count_nonzero(blocks))
         nnzb = coo.nnzb
         real = int((blocks.reshape(nnzb, -1) != 0).any(axis=1).sum())
-        e, i, _ = np.nonzero(blocks)
+        e, i, j = np.nonzero(blocks)
         grows = np.asarray(coo.rows)[e].astype(np.int64) * coo.bm + i
+        gcols = np.asarray(coo.cols)[e].astype(np.int64) * coo.bn + j
         row_nnz = np.bincount(grows, minlength=coo.shape[0])
         return MatrixStats(
             shape=coo.shape,
@@ -105,23 +185,27 @@ class MatrixStats:
             ell_width=0,
             occupancy=real / max(nnzb, 1),
             sell_stored_elements=sell_slot_volume(row_nnz),
+            **_structure_features(coo.shape, grows, gcols, row_nnz),
         )
 
     @staticmethod
     def from_csr(csr: CSR, block_m: int = 1, block_n: int = 1
                  ) -> "MatrixStats":
-        """Element-granular stats (stored == nnz: CSR streams no padding)."""
-        return MatrixStats(
-            shape=csr.shape,
-            nnz=csr.nnz,
-            stored_elements=csr.nnz,
-            block_m=block_m,
-            block_n=block_n,
-            n_block_rows=csr.shape[0],
-            ell_width=0,
-            occupancy=1.0,
-            sell_stored_elements=sell_slot_volume(np.diff(csr.indptr)),
-        )
+        """Stats of a host CSR, priced at the same blocked granularity
+        as every other constructor (see :meth:`from_coords`).
+
+        With the default 1x1 block this is element-ELL pricing: the
+        streaming layout's width is the heaviest row's nnz, so
+        ``stored_elements == M * max_row_nnz`` — NOT ``nnz``.  Pricing
+        the ELL path at raw nnz made the same matrix auto-plan
+        differently depending on which form its stats were measured
+        from (csr-built stats always picked ell).
+        """
+        rows = np.repeat(np.arange(csr.shape[0], dtype=np.int64),
+                         np.diff(csr.indptr))
+        return MatrixStats.from_coords(
+            csr.shape, rows, np.asarray(csr.indices, dtype=np.int64),
+            block_m=block_m, block_n=block_n, nnz=csr.nnz)
 
 
 def sparsity_bucket(density: float, per_decade: int = 2) -> int:

@@ -87,12 +87,29 @@ def init_mlp(key, cfg: ModelConfig, d: Optional[int] = None,
     return p
 
 
+def _wmat(x, w):
+    """x @ w where w may be a pruned ``SparseMatrix`` weight.
+
+    Sparse weights (see ``models.pruning``) go through the planned
+    sparse front-end via ``__rmatmul__`` — [B, S, d] collapses to one
+    [B*S, d] operand so the whole batch rides a single dispatch plan —
+    and come back in x's compute dtype like a dense weight would.
+    """
+    from repro.sparse.matrix import SparseMatrix
+
+    if isinstance(w, SparseMatrix):
+        lead = x.shape[:-1]
+        y = x.reshape(-1, x.shape[-1]) @ w
+        return y.reshape(lead + (w.shape[1],)).astype(x.dtype)
+    return x @ w.astype(x.dtype)
+
+
 def mlp(p, x, cfg: ModelConfig):
-    h = x @ p["wi"].astype(x.dtype)
+    h = _wmat(x, p["wi"])
     h = activation(h, cfg.act)
     if cfg.gated_mlp:
-        h = h * (x @ p["wg"].astype(x.dtype))
-    return h @ p["wo"].astype(x.dtype)
+        h = h * _wmat(x, p["wg"])
+    return _wmat(h, p["wo"])
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,155 @@
+"""Sparse-weight transformer inference: magnitude pruning + conversion.
+
+The paper's DLMC motivation in model form: transformer MLP weights are
+magnitude-pruned at block granularity (the ``block_pruned`` corpus
+family is exactly this structure) and shipped as planned
+:class:`~repro.sparse.matrix.SparseMatrix` operands, so every MLP
+matmul in ``models.transformer`` runs through the sparsity-adaptive
+dispatch front-end instead of a dense matmul over mostly-zero weights.
+
+``sparsify_lm`` rewrites an ``init_lm`` params tree in place of the
+dense one:
+
+  * period blocks are *unstacked* (scan-stacked leaves indexed back out
+    into per-period tuples) because each pruned weight carries its own
+    host topology and cannot ride ``lax.scan``;
+  * every MLP ``wi``/``wg``/``wo`` becomes a ``SparseMatrix`` built
+    from the pruned dense weight (structure measured, plan memoized on
+    first use);
+  * everything else (embeddings, attention, norms) stays dense.
+
+The transformer forward detects the unstacked layout and python-loops
+the periods (see ``transformer._unstacked_periods``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+# MLP weight leaves that get pruned + converted
+_MLP_KEYS = ("wi", "wg", "wo")
+
+
+def magnitude_prune(w, sparsity: float, block: Tuple[int, int] = (1, 1)
+                    ) -> np.ndarray:
+    """Zero the smallest-magnitude blocks of a [d_in, d_out] weight.
+
+    ``block = (1, 1)`` is unstructured pruning; larger blocks score each
+    tile by its L2 norm and drop whole tiles — the DLMC structured
+    pattern the blocked kernels are built for.  Keeps the
+    ceil((1-sparsity) * n_blocks) highest-scoring blocks, so realized
+    sparsity is within one block of the request.
+    """
+    if not 0.0 <= sparsity < 1.0:
+        raise ValueError(f"sparsity must be in [0, 1), got {sparsity}")
+    w = np.asarray(w, np.float32)
+    m, n = w.shape
+    bm, bn = block
+    if m % bm or n % bn:
+        raise ValueError(
+            f"weight shape {w.shape} not divisible by prune block {block}")
+    gm, gn = m // bm, n // bn
+    tiles = w.reshape(gm, bm, gn, bn).transpose(0, 2, 1, 3)
+    score = np.sqrt((tiles.astype(np.float64) ** 2).sum(axis=(2, 3)))
+    keep = int(np.ceil((1.0 - sparsity) * gm * gn))
+    if keep >= gm * gn:
+        return w
+    # stable cutoff: keep the `keep` largest tile norms
+    flat = score.reshape(-1)
+    order = np.argsort(-flat, kind="stable")
+    mask = np.zeros(gm * gn, bool)
+    mask[order[:keep]] = True
+    tiles = tiles * mask.reshape(gm, gn, 1, 1)
+    return tiles.transpose(0, 2, 1, 3).reshape(m, n).astype(np.float32)
+
+
+def _to_sparse(w, *, sparsity: float, prune_block: Tuple[int, int],
+               formats: Optional[Tuple[str, ...]], format: str,
+               block: Tuple[int, int]):
+    from repro.sparse.matrix import SparseMatrix
+
+    pruned = magnitude_prune(w, sparsity, prune_block)
+    return SparseMatrix.from_dense(pruned, formats=formats, format=format,
+                                   block=block)
+
+
+def _sparsify_block(blk: Dict[str, Any], **kw) -> Dict[str, Any]:
+    out = dict(blk)
+    if "mlp" in blk:
+        out["mlp"] = {
+            k: (_to_sparse(v, **kw) if k in _MLP_KEYS else v)
+            for k, v in blk["mlp"].items()
+        }
+    return out
+
+
+def sparsify_lm(params: Dict[str, Any], cfg: ModelConfig, *,
+                sparsity: float = 0.9,
+                prune_block: Tuple[int, int] = (8, 8),
+                formats: Optional[Tuple[str, ...]] = ("ell", "csr"),
+                format: str = "auto",
+                block: Tuple[int, int] = (64, 64)) -> Dict[str, Any]:
+    """Prune every MLP weight of an ``init_lm`` params tree to
+    ``SparseMatrix`` form; returns a new params dict with unstacked
+    periods (safe to feed straight to ``forward_hidden`` /
+    ``decode_step`` / ``lm_loss``).
+
+    ``prune_block`` is the pruning granule (tile-norm magnitude
+    pruning); ``block`` the Block-ELL storage tile of the converted
+    operand; ``formats``/``format`` pass through to
+    ``SparseMatrix.from_dense``.
+    """
+    kw = dict(sparsity=sparsity, prune_block=prune_block, formats=formats,
+              format=format, block=block)
+    out = dict(params)
+    if cfg.n_periods and params["periods"]:
+        unstacked = []
+        for i in range(cfg.n_periods):
+            period = jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                            params["periods"])
+            unstacked.append(tuple(_sparsify_block(b, **kw)
+                                   for b in period))
+        out["periods"] = tuple(unstacked)
+    out["remainder"] = tuple(_sparsify_block(b, **kw)
+                             for b in params["remainder"])
+    return out
+
+
+def weight_sparsity_report(params: Dict[str, Any]) -> Dict[str, float]:
+    """Measured structure of the sparse weights in a params tree.
+
+    Returns aggregate counts over every ``SparseMatrix`` leaf:
+    ``n_sparse`` operands, true ``nnz`` vs logical ``elements``, and
+    the realized global ``sparsity``.
+    """
+    from repro.sparse.matrix import SparseMatrix
+
+    n_sparse, nnz, elements = 0, 0, 0
+    for leaf in jax.tree_util.tree_leaves(
+            params, is_leaf=lambda x: isinstance(x, SparseMatrix)):
+        if isinstance(leaf, SparseMatrix):
+            n_sparse += 1
+            nnz += leaf.stats.nnz
+            elements += leaf.stats.dense_elements
+    return {
+        "n_sparse": n_sparse,
+        "nnz": nnz,
+        "elements": elements,
+        "sparsity": 1.0 - nnz / elements if elements else 0.0,
+    }
+
+
+def dense_reference(params: Dict[str, Any]) -> Dict[str, Any]:
+    """Densify every ``SparseMatrix`` weight back to a jnp array —
+    the numerical oracle for sparse-vs-dense parity tests."""
+    from repro.sparse.matrix import SparseMatrix
+
+    return jax.tree_util.tree_map(
+        lambda x: jnp.asarray(x.to("dense")) if isinstance(x, SparseMatrix)
+        else x,
+        params, is_leaf=lambda x: isinstance(x, SparseMatrix))

@@ -63,6 +63,16 @@ def _stack(trees):
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
 
 
+def _unstacked_periods(periods) -> bool:
+    """True when ``params["periods"]`` is a tuple of per-period block
+    tuples rather than scan-stacked leaves.  Sparse-weight params (see
+    ``models.pruning.sparsify_lm``) are shipped this way: a pruned
+    weight is a host-planned ``SparseMatrix`` whose topology differs
+    per layer, so periods cannot be stacked or scanned and are applied
+    with a python loop instead."""
+    return bool(periods) and isinstance(periods[0], tuple)
+
+
 def init_lm(key, cfg: ModelConfig):
     keys = jax.random.split(key, cfg.n_layers + 8)
     cross = cfg.encoder_layers > 0
@@ -303,12 +313,14 @@ def forward_hidden(params, cfg: ModelConfig, tokens, *, vision_embeds=None,
         body = jax.checkpoint(period_body, policy=policy)
 
     aux0 = jnp.zeros((), jnp.float32)
-    if cfg.n_periods and runtime.unrolled():
+    unstacked = _unstacked_periods(params["periods"])
+    if cfg.n_periods and (unstacked or runtime.unrolled()):
         carry = (x, aux0)
         pcs = []
         for i in range(cfg.n_periods):
-            period_p = jax.tree_util.tree_map(lambda a, i=i: a[i],
-                                              params["periods"])
+            period_p = params["periods"][i] if unstacked else \
+                jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                       params["periods"])
             carry, pc = body(carry, period_p)
             pcs.append(pc)
         (x, aux) = carry
@@ -465,11 +477,18 @@ def decode_step(params, cfg: ModelConfig, token, cache):
             new_caches.append(nc)
         return x, tuple(new_caches)
 
-    if cfg.n_periods and runtime.unrolled():
+    unstacked = _unstacked_periods(params["periods"])
+    if cfg.n_periods and (unstacked or runtime.unrolled()):
         pcs = []
         for i in range(cfg.n_periods):
-            scanned = jax.tree_util.tree_map(
-                lambda a, i=i: a[i], (params["periods"], cache["periods"]))
+            if unstacked:
+                scanned = (params["periods"][i],
+                           jax.tree_util.tree_map(lambda a, i=i: a[i],
+                                                  cache["periods"]))
+            else:
+                scanned = jax.tree_util.tree_map(
+                    lambda a, i=i: a[i],
+                    (params["periods"], cache["periods"]))
             x, pc = period_body(x, scanned)
             pcs.append(pc)
         new_periods = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *pcs)

@@ -331,7 +331,11 @@ class BatchServingEngine:
     # -- worker -------------------------------------------------------------
 
     def _serve_loop(self) -> None:
-        window_s = self.scfg.max_delay_ms / 1e3
+        # a negative max_delay_ms must degrade to greedy (immediate)
+        # flushing, never reach Queue.get as a negative timeout — that
+        # raises ValueError, kills the worker thread, and strands every
+        # queued future with no error
+        window_s = max(self.scfg.max_delay_ms, 0.0) / 1e3
         while not self._stop.is_set():
             try:
                 first = self._queue.get(timeout=0.05)
@@ -349,7 +353,12 @@ class BatchServingEngine:
                     continue
                 except queue_mod.Empty:
                     pass
-                remaining = deadline - time.perf_counter()
+                # clamped to [0, window]: a slow request — one that sat
+                # queued past its whole window while the worker flushed
+                # an earlier batch — yields a *negative* remainder and
+                # must flush now, not wait; the upper clamp bounds any
+                # single wait to one window regardless of timestamp skew
+                remaining = min(deadline - time.perf_counter(), window_s)
                 if remaining <= 0:
                     break
                 try:

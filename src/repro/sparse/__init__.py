@@ -18,7 +18,7 @@ semantics, gradient rules, and the legacy-surface deprecation timeline.
 from repro.kernels.fused.epilogue import Epilogue
 from repro.sparse.matrix import FORMATS, SparseMatrix
 from repro.sparse.ops import (available_paths, fused_graph_attention,
-                              matmul, sample, sddmm)
+                              matmul, sample, sddmm, spmv)
 from repro.sparse.plan import (PlanCache, plan_cache_stats,
                                reset_plan_cache_stats)
 
@@ -27,6 +27,6 @@ spmm = matmul  # functional alias mirroring the legacy free function
 __all__ = [
     "Epilogue", "FORMATS", "SparseMatrix",
     "available_paths", "fused_graph_attention", "matmul", "sample",
-    "sddmm", "spmm",
+    "sddmm", "spmm", "spmv",
     "PlanCache", "plan_cache_stats", "reset_plan_cache_stats",
 ]

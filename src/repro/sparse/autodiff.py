@@ -145,6 +145,42 @@ def spmm_exec(cfg: Cfg, a: SparseMatrix, h):
     raise ValueError(f"unknown spmm path {path!r}")
 
 
+def spmv_exec(cfg: Cfg, a: SparseMatrix, x):
+    """Run one planned SpMV path; x: [N] logical entries; returns [M].
+
+    The vector fast lane: same path vocabulary as SpMM, but each layout
+    runs a direct reduction (see paths.spmv_*) instead of the [N, 1]
+    tile pipeline.  ``bd`` in cfg is ignored — there is no D to tile.
+    """
+    path, _use_kernel, _interpret, _bd, out_dtype = cfg
+    m = a.shape[0]
+    if path == PATH_ELL:
+        if "ell" in a._forms:
+            ell = a._forms["ell"]
+            y = paths.spmv_ell(ell, paths.pad_rows(x, ell.shape[1]),
+                               out_dtype=out_dtype)
+        else:
+            coo = a._forms["coo"]
+            y = paths.spmv_coo(coo, paths.pad_rows(x, coo.shape[1]),
+                               out_dtype=out_dtype)
+        return y[:m]
+    if path == PATH_SELL:
+        if "sell" in a._forms:
+            return paths.spmv_sell(a._forms["sell"], x,
+                                   out_dtype=out_dtype)
+        r, c, v = a.form("csr")  # transposed sell: slot triplet
+        y = paths.spmv_elements(r, c, v, x, m)
+        return y.astype(out_dtype) if out_dtype else y
+    if path == PATH_CSR:
+        r, c, v = a.form("csr")
+        y = paths.spmv_elements(r, c, v, x, m)
+        return y.astype(out_dtype) if out_dtype else y
+    if path == PATH_DENSE:
+        y = paths.spmm_dense(a.densify(), x)
+        return y.astype(out_dtype) if out_dtype else y
+    raise ValueError(f"unknown spmv path {path!r}")
+
+
 def sample_exec(cfg: Cfg, a: SparseMatrix, b, c):
     """Raw sampled dots (B @ C at A's stored slots), in the layout of the
     form the path reads — the unweighted SDDMM the backward rules share."""
@@ -230,6 +266,41 @@ def _spmm_bwd(cfg: Cfg, res, g):
 
 
 spmm.defvjp(_spmm_fwd, _spmm_bwd)
+
+
+# ---------------------------------------------------------------------------
+# SpMV: y = A @ x  (vector fast lane; same duality at d = 1)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def spmv(cfg: Cfg, a: SparseMatrix, x):
+    return spmv_exec(cfg, a, x)
+
+
+def _spmv_fwd(cfg: Cfg, a: SparseMatrix, x):
+    return spmv_exec(cfg, a, x), (a, x)
+
+
+def _spmv_bwd(cfg: Cfg, res, g):
+    path = cfg[0]
+    a, x = res
+    # dx = Aᵀ @ ḡ : another SpMV, on the transposed operand.
+    dx = spmv_exec((path, cfg[1], cfg[2], None, None), a.T, g)
+    _record_vjp("spmv", path, "vjp: dx = Aᵀ @ ḡ (spmv backward)", cfg)
+    # dA = pattern(A) ⊙ (ḡ xᵀ) : rank-1 SDDMM on A's topology.
+    form_name = form_read_by(a, path)
+    raw = sample_exec((path, cfg[1], cfg[2], None, None), a,
+                      g[:, None], x[None, :])
+    _record_vjp("sddmm", path,
+                "vjp: dA = pattern(A) ⊙ (ḡ xᵀ) (spmv backward is sddmm)",
+                cfg)
+    vals = values_of(form_name, a._forms[form_name])
+    da = _cotangent_like(a, form_name, _mask_structural(vals, raw))
+    return da, dx.astype(x.dtype)
+
+
+spmv.defvjp(_spmv_fwd, _spmv_bwd)
 
 
 # ---------------------------------------------------------------------------

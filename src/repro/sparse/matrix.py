@@ -38,8 +38,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import (CSR, BlockCOO, BlockELL, SellCS, _cdiv,
-                                sell_slot_volume)
+from repro.core.formats import CSR, BlockCOO, BlockELL, SellCS
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
 from repro.dispatch.policy import PATH_CSR, PATH_SELL
 from repro.dispatch.stats import MatrixStats
@@ -111,24 +110,8 @@ def _blocked_stats(shape: Tuple[int, int], rows: np.ndarray,
                    cols: np.ndarray, bm: int, bn: int,
                    nnz: int) -> MatrixStats:
     """Blocked-layout stats from element coordinates (no blocks built)."""
-    m, n = shape
-    nbr, nbc = _cdiv(m, bm), _cdiv(n, bn)
-    bids = (rows.astype(np.int64) // bm) * nbc + cols.astype(np.int64) // bn
-    ub = np.unique(bids)
-    counts = np.bincount((ub // nbc).astype(np.int64), minlength=nbr)
-    width = max(int(counts.max()) if len(counts) else 0, 1)
-    row_nnz = np.bincount(rows.astype(np.int64), minlength=m)
-    return MatrixStats(
-        shape=(nbr * bm, nbc * bn),
-        nnz=int(nnz),
-        stored_elements=int(nbr * width * bm * bn),
-        block_m=bm,
-        block_n=bn,
-        n_block_rows=nbr,
-        ell_width=width,
-        occupancy=len(ub) / max(nbr * width, 1),
-        sell_stored_elements=sell_slot_volume(row_nnz),
-    )
+    return MatrixStats.from_coords(shape, rows, cols, block_m=bm,
+                                   block_n=bn, nnz=nnz)
 
 
 def _transpose_stats(stats: Optional[MatrixStats]) -> Optional[MatrixStats]:

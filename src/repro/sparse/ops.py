@@ -31,7 +31,8 @@ from repro.dispatch import autotune as autotune_mod
 from repro.dispatch.autotune import AutotuneCache, make_key, measure
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
 from repro.dispatch.dispatcher import (Plan, plan_fused_attention,
-                                       plan_sddmm, plan_spmm, record_plan)
+                                       plan_sddmm, plan_spmm, plan_spmv,
+                                       record_plan)
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
                                    PATH_CSR, PATH_DENSE, PATH_ELL,
                                    PATH_FUSED_ATTN, PATH_SELL, POLICY_AUTO,
@@ -141,6 +142,11 @@ def _resolve_plan(op: str, a: SparseMatrix, inner_dim, ref_dtype,
                 a.stats, inner_dim[0], inner_dim[1], policy=policy,
                 cost_model=cost_model, config=config, use_kernel=uk,
                 interpret=interpret, candidates=cand)
+        elif op == "spmv":
+            plan = plan_spmv(a.stats, policy=policy,
+                             cost_model=cost_model, config=config,
+                             use_kernel=uk, interpret=interpret,
+                             candidates=cand)
         else:
             planner = plan_spmm if op == "spmm" else plan_sddmm
             plan = planner(a.stats, inner_dim, policy=policy,
@@ -190,6 +196,13 @@ def matmul(
         raise TypeError(f"matmul expects a SparseMatrix, got {type(a)}")
     h = jnp.asarray(h)
     h_was_1d = h.ndim == 1
+    if h_was_1d and epilogue is None and bias is None and residual is None:
+        # vector operand with no fused tail: take the SpMV fast lane
+        # (direct per-layout reductions, no [N, 1] tile machinery)
+        return spmv(a, h, policy=policy, candidates=candidates,
+                    use_kernel=use_kernel, interpret=interpret,
+                    out_dtype=out_dtype, cost_model=cost_model,
+                    config=config, autotune_cache=autotune_cache)
     if h_was_1d:
         h = h[:, None]
         if residual is not None and jnp.ndim(residual) == 1:
@@ -245,6 +258,61 @@ def matmul(
             (plan.path, plan.use_kernel, plan.interpret, bd, odt, epi),
             a, h, bias, residual)
     return y[:, 0] if h_was_1d else y
+
+
+# ---------------------------------------------------------------------------
+# SpMV
+# ---------------------------------------------------------------------------
+
+
+def spmv(
+    a: SparseMatrix,
+    x,
+    *,
+    policy: str = POLICY_AUTO,
+    candidates: Optional[Tuple[str, ...]] = None,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = False,
+    out_dtype=None,
+    cost_model: CostModel = DEFAULT_COST_MODEL,
+    config: DispatchConfig = DEFAULT_CONFIG,
+    autotune_cache: Optional[AutotuneCache] = None,
+):
+    """y = A @ x for a [N] vector, through the unified front-end.
+
+    The dedicated d = 1 entry: plans on the SpMM cost surface at unit
+    feature width (op tag ``"spmv"`` in the dispatch log) and executes
+    direct per-layout reductions — no kernel grids, no D-padding, no
+    epilogue plumbing.  ``matmul`` delegates its 1-D branch here, so
+    ``A @ v`` gets this lane automatically.  Differentiable: the
+    backward is the same SpMM duality at d = 1 (dx = Aᵀ ḡ, dA a rank-1
+    SDDMM).
+    """
+    if not isinstance(a, SparseMatrix):
+        raise TypeError(f"spmv expects a SparseMatrix, got {type(a)}")
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"spmv: x must be 1-D, got shape {x.shape}")
+    if x.shape[0] != a.shape[1]:
+        raise ValueError(
+            f"spmv: x has {x.shape[0]} rows but A has {a.shape[1]} "
+            f"columns (A shape {a.shape})")
+    policy = normalize_policy(policy)
+    cand = tuple(candidates) if candidates else available_paths(a)
+    uk = use_kernel if use_kernel is not None else _default_use_kernel(config)
+    interpret = bool(interpret)
+    odt = None if out_dtype is None else str(jnp.dtype(out_dtype))
+
+    def exec_thunk(p):
+        return lambda: autodiff.spmv_exec((p, uk, interpret, None, odt),
+                                          a, x)
+
+    plan = _resolve_plan("spmv", a, 1, x.dtype, policy, cand, uk,
+                         interpret, cost_model, config, autotune_cache,
+                         exec_thunk, concrete=not _is_traced(a, x))
+    record_plan(plan)
+    return autodiff.spmv(
+        (plan.path, plan.use_kernel, plan.interpret, None, odt), a, x)
 
 
 # ---------------------------------------------------------------------------

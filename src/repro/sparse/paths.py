@@ -77,6 +77,73 @@ def sddmm_elements(row_ids, col_ids, values, b, c):
 
 
 # ---------------------------------------------------------------------------
+# SpMV (d = 1) paths — vector fast lane, no SpMM tile machinery
+# ---------------------------------------------------------------------------
+#
+# y = A @ x for a [N] vector.  The SpMM paths would run these as [N, 1]
+# matrices through the blocked tile pipeline (kernel grids, D-padding,
+# epilogue plumbing); with one output column none of that pays for
+# itself, so each layout gets a direct reduction instead.
+
+
+def spmv_elements(row_ids, col_ids, values, x, num_rows: int):
+    """y = A @ x via gather + segment-sum (element-granular)."""
+    prod = values.astype(jnp.float32) * x[col_ids].astype(jnp.float32)
+    out = jax.ops.segment_sum(prod, row_ids, num_segments=num_rows)
+    return out.astype(x.dtype)
+
+
+def spmv_ell(ell: BlockELL, x, *, out_dtype=None):
+    """y = A @ x with A in Block-ELL; x already padded to ell.shape[1].
+
+    One einsum over the gathered x-blocks — the block columns each slot
+    points at — contracting both the slot axis and the in-block column.
+    """
+    bn = ell.bn
+    x_blocks = x.reshape(ell.shape[1] // bn, bn)
+    gathered = x_blocks[ell.indices]  # [nbr, W, bn]
+    y = jnp.einsum("rwmn,rwn->rm", ell.blocks.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    out_dtype = out_dtype or jnp.result_type(ell.blocks.dtype, x.dtype)
+    return y.reshape(ell.shape[0]).astype(out_dtype)
+
+
+def spmv_coo(coo: BlockCOO, x, *, out_dtype=None):
+    """y = A @ x with A in Block-COO (scatter-add over nonzero blocks)."""
+    bm, bn = coo.bm, coo.bn
+    x_blocks = x.reshape(coo.shape[1] // bn, bn)
+    prods = jnp.einsum("emn,en->em", coo.blocks.astype(jnp.float32),
+                       x_blocks[coo.cols].astype(jnp.float32))
+    out = jnp.zeros((coo.shape[0] // bm, bm), jnp.float32) \
+        .at[coo.rows].add(prods)
+    out_dtype = out_dtype or jnp.result_type(coo.blocks.dtype, x.dtype)
+    return out.reshape(coo.shape[0]).astype(out_dtype)
+
+
+def spmv_sell(sell: SellCS, x, *, out_dtype=None):
+    """y = A @ x with A in SELL-C-σ — scatter-free per-bucket reduction.
+
+    Each width bucket is one [rows, w] elementwise product + row sum;
+    the epilogue gather un-permutes rows exactly like spmm_sell_ref
+    (the appended zero covers pruned all-zero rows).
+    """
+    m, _ = sell.shape
+    out_dtype = out_dtype or jnp.result_type(sell.slot_vals.dtype, x.dtype)
+    if not sell.buckets:
+        return jnp.zeros((m,), out_dtype)
+    outs = []
+    off = 0
+    for _, rows, width in sell.buckets:
+        cols = sell.slot_cols[off:off + rows * width].reshape(rows, width)
+        vals = sell.slot_vals[off:off + rows * width].reshape(rows, width)
+        outs.append((vals.astype(jnp.float32)
+                     * x[cols].astype(jnp.float32)).sum(axis=-1))
+        off += rows * width
+    packed = jnp.concatenate(outs + [jnp.zeros((1,), jnp.float32)])
+    return packed[sell.out_gather].astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
 # Blocked ("ell") paths
 # ---------------------------------------------------------------------------
 

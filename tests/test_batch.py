@@ -420,3 +420,101 @@ def test_block_diag_sell_composition(rng):
     # composed stats price the sell path (sum of per-graph slot volumes)
     assert B.stats.sell_stored_elements == \
         sum(m.stats.sell_stored_elements for m in mats)
+
+
+# ---------------------------------------------------------------------------
+# serving-engine worker-loop hardening (deadline clamp regressions)
+# ---------------------------------------------------------------------------
+
+
+def _inject(eng, graph, x, t_submit):
+    """Enqueue a request with a forged submit timestamp, bypassing
+    ``submit`` — the only way to exercise the worker loop's handling of
+    requests whose window math is already skewed when they arrive."""
+    from concurrent.futures import Future
+
+    from repro.serve.engine import _Request
+
+    req = _Request(matrix=graph.adj, features=x, future=Future(),
+                   t_submit=t_submit)
+    if eng._t_first is None:
+        eng._t_first = req.t_submit
+    eng._submitted += 1
+    eng._queue.put(req)
+    return req.future
+
+
+def test_slow_request_flushes_on_deadline_immediately(gcn_setup):
+    """A request that sat queued past its whole window (stale t_submit)
+    must flush *now* via the deadline path — the worker must not wait
+    another window for company — and the engine keeps serving after."""
+    import time
+
+    from repro.serve.engine import BatchServeConfig, BatchServingEngine
+
+    cfg, params, graphs = gcn_setup
+    g = graphs[0]
+    x = jnp.zeros((g.n_nodes, cfg.in_features), jnp.float32)
+    with BatchServingEngine.for_gcn(
+            params, scfg=BatchServeConfig(max_batch=8,
+                                          max_delay_ms=50.0)) as eng:
+        eng.infer(g, x)  # warm the executor so compile time is gone
+        eng.drain(timeout=60)
+        before = eng.report()["flushes"]
+        fut = _inject(eng, g, x, time.perf_counter() - 1.0)  # long stale
+        y = fut.result(timeout=60)
+        assert y.shape == (g.n_nodes, cfg.n_classes)
+        eng.drain(timeout=60)
+        after = eng.report()["flushes"]
+        # exactly one new flush, on the deadline path (1 req < max_batch)
+        assert after["deadline"] == before["deadline"] + 1
+        assert after["full"] == before["full"]
+        # worker alive and serving
+        assert eng._worker.is_alive()
+        eng.infer(g, x)
+
+
+def test_skewed_future_timestamp_wait_is_bounded(gcn_setup):
+    """A forged *future* t_submit (clock skew, replayed request) must
+    not stall the worker for the skew: any single wait is clamped to
+    one delay window.  Pre-clamp the worker slept ~30 s here."""
+    import time
+
+    from repro.serve.engine import BatchServeConfig, BatchServingEngine
+
+    cfg, params, graphs = gcn_setup
+    g = graphs[0]
+    x = jnp.zeros((g.n_nodes, cfg.in_features), jnp.float32)
+    with BatchServingEngine.for_gcn(
+            params, scfg=BatchServeConfig(max_batch=8,
+                                          max_delay_ms=5.0)) as eng:
+        eng.infer(g, x)  # warm executor
+        fut = _inject(eng, g, x, time.perf_counter() + 30.0)
+        y = fut.result(timeout=10)  # pre-fix: stuck ~30 s, times out
+        assert y.shape == (g.n_nodes, cfg.n_classes)
+        assert eng._worker.is_alive()
+
+
+@pytest.mark.parametrize("delay_ms", [0.0, -3.0])
+def test_non_positive_delay_degrades_to_greedy_flushing(gcn_setup,
+                                                        delay_ms):
+    """max_delay_ms <= 0 means greedy flushing: every request resolves,
+    the worker thread survives (a negative Queue.get timeout would
+    raise ValueError and strand every queued future)."""
+    from repro.serve.engine import BatchServeConfig, BatchServingEngine
+
+    cfg, params, graphs = gcn_setup
+    g = graphs[0]
+    x = jnp.zeros((g.n_nodes, cfg.in_features), jnp.float32)
+    with BatchServingEngine.for_gcn(
+            params, scfg=BatchServeConfig(max_batch=4,
+                                          max_delay_ms=delay_ms)) as eng:
+        futs = [eng.submit(g, x) for _ in range(6)]
+        for f in futs:
+            y = f.result(timeout=60)
+            assert y.shape == (g.n_nodes, cfg.n_classes)
+        eng.drain(timeout=60)
+        rep = eng.report()
+        assert rep["completed"] == rep["submitted"] == 6
+        assert rep["failed"] == 0
+        assert eng._worker.is_alive()

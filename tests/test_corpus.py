@@ -1,0 +1,201 @@
+"""Matrix-corpus generators + structure-aware dispatch.
+
+Covers the structured-matrix corpus (determinism, realized sparsity,
+feature discrimination), the cross-form stats-granularity regression
+(the same matrix must produce the same stats — and therefore the same
+plan — whichever storage form the stats were measured from), and the
+acceptance property that the auto policy picks *different* execution
+paths for matrices of equal global sparsity but different structure.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.formats import CSR, BlockELL
+from repro.corpus import (CorpusSpec, FAMILIES, default_corpus, make_dense,
+                          make_matrix)
+from repro.dispatch.dispatcher import plan_spmm, plan_spmv
+from repro.dispatch.stats import MatrixStats
+
+FULL = ("ell", "sell", "csr", "dense")
+LEGACY = ("ell", "csr", "dense")  # the GNN Graph candidate set
+
+
+def _stats(family, sparsity, shape=(512, 512), block=(4, 4), **kw):
+    spec = CorpusSpec(family=family, shape=shape, sparsity=sparsity, **kw)
+    return MatrixStats.from_csr(CSR.from_dense(make_dense(spec)),
+                                block[0], block[1])
+
+
+# ---------------------------------------------------------------------------
+# Generators
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_generators_deterministic_under_seed(family):
+    spec = CorpusSpec(family=family, shape=(128, 128), sparsity=0.9, seed=3)
+    np.testing.assert_array_equal(make_dense(spec), make_dense(spec))
+    other = dataclasses.replace(spec, seed=4)
+    assert (make_dense(spec) != make_dense(other)).any()
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+@pytest.mark.parametrize("sparsity", [0.9, 0.99])
+def test_realized_sparsity_matches_request(family, sparsity):
+    spec = CorpusSpec(family=family, shape=(256, 256), sparsity=sparsity)
+    nnz = np.count_nonzero(make_dense(spec))
+    # block_pruned rounds to whole tiles; everything else is exact-count
+    tol = 8 * 8 // 2 if family == "block_pruned" else 0
+    assert abs(nnz - spec.target_nnz) <= tol, (family, nnz, spec.target_nnz)
+
+
+def test_banded_capacity_clamp():
+    # a 4-wide band cannot hold 50% density: the generator fills the
+    # whole band and stops instead of scattering out-of-band nonzeros
+    spec = CorpusSpec(family="banded", shape=(64, 64), sparsity=0.5,
+                      band_width=4)
+    a = make_dense(spec)
+    i, j = np.nonzero(a)
+    assert np.abs(i - j).max() <= 4
+    assert np.count_nonzero(a) < spec.target_nnz  # clamped, not scattered
+
+
+def test_banded_diagonal_dominance():
+    a = make_dense(CorpusSpec(family="banded", shape=(128, 128),
+                              sparsity=0.9, band_width=8))
+    d = np.abs(np.diag(a))
+    off = np.abs(a).sum(axis=1) - d
+    assert (d[d > 0] > off[d > 0]).all()
+
+
+def test_block_pruned_structure_is_whole_tiles():
+    spec = CorpusSpec(family="block_pruned", shape=(64, 64), sparsity=0.9,
+                      block=(8, 8))
+    a = make_dense(spec)
+    tiles = a.reshape(8, 8, 8, 8).transpose(0, 2, 1, 3).reshape(64, -1)
+    tile_nnz = (tiles != 0).sum(axis=1)
+    # every tile is either fully dense or fully zero
+    assert set(np.unique(tile_nnz)) <= {0, 64}
+
+
+def test_structure_features_discriminate_families():
+    s = {f: _stats(f, 0.99, shape=(256, 256), block=(1, 1))
+         for f in ("uniform", "powerlaw", "banded")}
+    # hub skew: powerlaw rows are far more uneven than uniform rows
+    assert s["powerlaw"].row_nnz_cv > 1.0 > s["uniform"].row_nnz_cv
+    assert s["powerlaw"].max_row_nnz > 4 * s["uniform"].max_row_nnz
+    # band locality: banded |i-j| stays near the diagonal, uniform p95
+    # of the normalized diagonal distance sits near 0.78
+    assert s["banded"].bandwidth_frac < 0.15 < s["uniform"].bandwidth_frac
+
+
+def test_default_corpus_covers_every_family():
+    specs = default_corpus(quick=True)
+    assert {sp.family for sp in specs} == set(FAMILIES)
+    assert {sp.sparsity for sp in specs} == {0.9, 0.99}
+
+
+def test_make_matrix_executes_against_dense_oracle(rng):
+    for family in ("powerlaw", "banded"):
+        spec = CorpusSpec(family=family, shape=(128, 128), sparsity=0.95)
+        a = make_dense(spec)
+        mat = make_matrix(spec, block=(8, 8))
+        h = rng.normal(size=(128, 16)).astype(np.float32)
+        np.testing.assert_allclose(np.asarray(mat @ h), a @ h,
+                                   rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Cross-form stats granularity (regression: the from_csr/from_blockell
+# disagreement made the same matrix plan differently per storage form)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", ["uniform", "powerlaw", "banded"])
+def test_stats_agree_across_storage_forms(family):
+    a = make_dense(CorpusSpec(family=family, shape=(128, 128),
+                              sparsity=0.97))
+    s_ell = MatrixStats.from_blockell(BlockELL.from_dense(a, 32, 32))
+    s_csr = MatrixStats.from_csr(CSR.from_dense(a), 32, 32)
+    for field in ("shape", "nnz", "stored_elements", "block_m", "block_n",
+                  "n_block_rows", "ell_width", "max_row_nnz",
+                  "sell_stored_elements"):
+        assert getattr(s_ell, field) == getattr(s_csr, field), field
+    for field in ("occupancy", "row_nnz_mean", "row_nnz_cv",
+                  "bandwidth_frac"):
+        np.testing.assert_allclose(getattr(s_ell, field),
+                                   getattr(s_csr, field), rtol=1e-12,
+                                   err_msg=field)
+    # same stats => same plan, whichever form the stats came from
+    assert plan_spmm(s_ell, 64, candidates=FULL).path \
+        == plan_spmm(s_csr, 64, candidates=FULL).path
+
+
+def test_from_csr_hub_row_prices_ell_stream_honestly():
+    """Pre-fix, csr-built stats priced the ELL stream at raw nnz, so a
+    single hub row — which forces the global ELL width to the full row
+    — still auto-planned ell from csr stats."""
+    a = np.zeros((256, 256), np.float32)
+    a[3, :] = 1.0  # one full hub row
+    s = MatrixStats.from_csr(CSR.from_dense(a))
+    assert s.max_row_nnz == 256
+    # element-granular ELL width is the heaviest row: M * max_row_nnz
+    assert s.ell_stream_estimate >= 256 * 256
+    assert plan_spmm(s, 64, candidates=LEGACY).path != "ell"
+
+
+def test_all_zero_from_csr_stats_are_empty_and_plannable():
+    s = MatrixStats.from_csr(CSR.from_dense(np.zeros((64, 64), np.float32)))
+    assert s.nnz == 0 and s.max_row_nnz == 0
+    assert s.row_nnz_cv == 0.0 and s.bandwidth_frac == 0.0
+    assert plan_spmm(s, 16, candidates=FULL).path in FULL
+
+
+# ---------------------------------------------------------------------------
+# Structure-aware dispatch (acceptance: equal sparsity, different path)
+# ---------------------------------------------------------------------------
+
+
+def test_auto_path_diverges_on_structure_at_equal_sparsity():
+    """Equal global sparsity, different row structure => the cost model
+    picks different execution paths (the PR's acceptance property)."""
+    uni99 = plan_spmm(_stats("uniform", 0.99), 64, candidates=FULL).path
+    hub99 = plan_spmm(_stats("powerlaw", 0.99), 64, candidates=FULL).path
+    assert uni99 != hub99
+    assert (uni99, hub99) == ("sell", "csr")
+    uni90 = plan_spmm(_stats("uniform", 0.9), 64, candidates=FULL).path
+    hub90 = plan_spmm(_stats("powerlaw", 0.9), 64, candidates=FULL).path
+    assert uni90 != hub90
+
+
+def test_hub_heavy_powerlaw_prefers_sell():
+    """Moderately hub-heavy rows (high CV, hubs short of a full row):
+    the load-balanced sell packing wins where global-width ell pays the
+    hub tax on every row and csr gives up the streaming discount."""
+    stats = _stats("powerlaw", 0.99, alpha=0.6)
+    assert stats.row_nnz_cv > 1.0  # genuinely hub-heavy
+    assert plan_spmm(stats, 64, candidates=FULL).path == "sell"
+
+
+def test_banded_legacy_candidates_prefer_csr():
+    """Without the sell form (the legacy GNN candidate set), a wide
+    hyper-sparse band still escapes the blocked path: its diagonal
+    block structure leaves most ELL slots padding."""
+    stats = _stats("banded", 0.99, band_width=64)
+    assert plan_spmm(stats, 64, candidates=LEGACY).path == "csr"
+
+
+def test_spmv_plans_on_unit_width_surface():
+    """At d=1 the streaming discount shrinks: a matrix that streams for
+    SpMM can tip to the exact-nnz path for SpMV."""
+    stats = _stats("uniform", 0.99)
+    p_spmm = plan_spmm(stats, 64, candidates=FULL)
+    p_spmv = plan_spmv(stats, candidates=FULL)
+    assert p_spmv.op == "spmv"
+    assert p_spmv.path in FULL
+    # same cost surface at d=1: identical relative costs, scaled
+    np.testing.assert_allclose(
+        p_spmv.costs["csr"] / max(p_spmv.costs["dense"], 1),
+        p_spmm.costs["csr"] / max(p_spmm.costs["dense"], 1), rtol=1e-9)

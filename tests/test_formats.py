@@ -269,3 +269,59 @@ def test_sellcs_empty_matrix():
     assert sell.n_live_block_rows == 0 and sell.buckets == ()
     np.testing.assert_array_equal(sell.to_dense(),
                                   np.zeros((64, 64), np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Degenerate inputs through the full SparseMatrix pipeline
+# ---------------------------------------------------------------------------
+#
+# Every format must survive the degenerate structures real corpora
+# contain — an all-zero operand, a single hub row that forces the
+# global ELL width to the full row, and shapes that leave ragged
+# block/slice remainders (M % C != 0, M % bm != 0) — at all three
+# layers: construction, measured stats, and execution against the
+# dense oracle (SpMM, SpMV, and the forced native path).
+
+
+def _degenerate(case, m, n, rng):
+    a = np.zeros((m, n), np.float32)
+    if case == "all_zero":
+        return a
+    if case == "hub_row":
+        a[min(3, m - 1), :] = 1.0 + np.abs(rng.normal(size=n)) \
+            .astype(np.float32)
+        return a
+    if case == "ragged":
+        mask = rng.random((m, n)) < 0.1
+        return np.where(mask, rng.normal(size=(m, n)), 0.0) \
+            .astype(np.float32)
+    raise ValueError(case)
+
+
+@pytest.mark.parametrize("fmt", ["ell", "sell", "csr", "coo"])
+@pytest.mark.parametrize("case,m,n", [
+    ("all_zero", 64, 64),
+    ("hub_row", 64, 64),
+    ("ragged", 100, 70),   # M % C != 0 and M % bm != 0
+])
+def test_degenerate_inputs_full_pipeline(rng, fmt, case, m, n):
+    from repro.sparse import SparseMatrix, matmul
+
+    a = _degenerate(case, m, n, rng)
+    A = SparseMatrix.from_dense(a, format=fmt, block=(16, 16))
+    s = A.stats
+    nnz = int(np.count_nonzero(a))
+    assert s.nnz == nnz
+    assert s.max_row_nnz == int((a != 0).sum(axis=1).max())
+    if case == "hub_row":
+        # the hub prices the whole streaming layout
+        assert s.ell_stream_estimate >= s.shape[0] * n
+    h = rng.normal(size=(n, 8)).astype(np.float32)
+    v = rng.normal(size=(n,)).astype(np.float32)
+    for pol in ("auto", "dense", fmt if fmt != "coo" else "ell"):
+        np.testing.assert_allclose(np.asarray(matmul(A, h, policy=pol)),
+                                   a @ h, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{fmt}/{case}/spmm/{pol}")
+        np.testing.assert_allclose(np.asarray(matmul(A, v, policy=pol)),
+                                   a @ v, rtol=2e-4, atol=2e-4,
+                                   err_msg=f"{fmt}/{case}/spmv/{pol}")

@@ -13,7 +13,7 @@ import pytest
 
 from repro.dispatch.dispatcher import clear_log, dispatch_log, last_plan
 from repro.sparse import (SparseMatrix, matmul, plan_cache_stats, sample,
-                          sddmm)
+                          sddmm, spmv)
 
 SWEEP = [0.5, 0.9, 0.99]
 N, D = 128, 16
@@ -504,3 +504,87 @@ def test_sell_kernel_route_grads_match_dense(operands, h):
     np.testing.assert_allclose(g_sparse[mask], np.asarray(g_ad)[mask],
                                rtol=1e-5, atol=1e-5)
     assert (g_sparse[~mask] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# SpMV: the d = 1 fast lane
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("sparsity", SWEEP)
+@pytest.mark.parametrize("path,fmt", PATH_FORMATS)
+def test_spmv_every_path_matches_dense(operands, sparsity, path, fmt):
+    dense = operands[sparsity]
+    A = SparseMatrix.from_dense(dense, format=fmt, block=BLOCK)
+    v = np.linspace(-1, 1, N, dtype=np.float32)
+    y = spmv(A, v, policy=path)
+    assert y.shape == (N,)
+    np.testing.assert_allclose(np.asarray(y), dense @ v,
+                               rtol=2e-4, atol=2e-4)
+    # transpose rides the same lane (auto policy: the transposed carrier
+    # may expose a different path set, e.g. sell.T falls back to csr)
+    np.testing.assert_allclose(np.asarray(spmv(A.T, v)),
+                               dense.T @ v, rtol=2e-4, atol=2e-4)
+
+
+def test_matmul_1d_delegates_to_spmv_op(operands):
+    """``A @ v`` plans on the dedicated unit-width surface — the plan
+    is tagged ``spmv``, not an ``spmm`` with d = 1."""
+    dense = operands[0.9]
+    A = SparseMatrix.from_dense(dense, format="ell", block=BLOCK)
+    v = np.ones(N, np.float32)
+    clear_log()
+    A @ v
+    ops = [p.op for p in dispatch_log()]
+    assert "spmv" in ops and "spmm" not in ops
+    assert last_plan().op == "spmv"
+    # the 2-D product still plans as spmm
+    clear_log()
+    A @ np.ones((N, D), np.float32)
+    assert last_plan().op == "spmm"
+
+
+def test_spmv_rejects_matrix_rhs_and_unavailable_path(operands):
+    A = SparseMatrix.from_dense(operands[0.9], format="csr")
+    with pytest.raises(ValueError, match="rows but A has"):
+        spmv(A, np.ones(N - 4, np.float32))
+    with pytest.raises(ValueError, match="not among available paths"):
+        spmv(A, np.ones(N, np.float32), policy="ell")
+
+
+@pytest.mark.parametrize("path,fmt", PATH_FORMATS)
+def test_spmv_grads_match_dense_autodiff(operands, path, fmt):
+    dense = operands[0.9]
+    A = SparseMatrix.from_dense(dense, format=fmt, block=BLOCK)
+    v = jnp.asarray(np.linspace(-1, 1, N, dtype=np.float32))
+    w = jnp.asarray(np.linspace(1, 2, N, dtype=np.float32))
+
+    def sparse_loss(vals, x):
+        return jnp.sum(jnp.tanh(spmv(A.with_data(vals), x,
+                                     policy=path)) * w)
+
+    def dense_loss(ad, x):
+        return jnp.sum(jnp.tanh(ad @ x) * w)
+
+    gv, gx = jax.grad(sparse_loss, argnums=(0, 1))(A.data, v)
+    g_ad, g_xd = jax.grad(dense_loss, argnums=(0, 1))(jnp.asarray(dense), v)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(g_xd),
+                               rtol=1e-5, atol=1e-5)
+    mask = dense != 0
+    g_sparse = A.with_data(gv).to_dense()
+    np.testing.assert_allclose(g_sparse[mask], np.asarray(g_ad)[mask],
+                               rtol=1e-5, atol=1e-5)
+    assert (g_sparse[~mask] == 0).all(), "gradient resurrected a zero"
+
+
+def test_spmv_jit_matches_eager(operands):
+    dense = operands[0.99]
+    A = SparseMatrix.from_dense(dense, formats=("sell", "csr"),
+                                block=BLOCK)
+    v = jnp.asarray(np.linspace(-1, 1, N, dtype=np.float32))
+    eager = spmv(A, v)
+    jitted = jax.jit(lambda a, x: spmv(a, x))(A, v)
+    np.testing.assert_allclose(np.asarray(jitted), np.asarray(eager),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(eager), dense @ np.asarray(v),
+                               rtol=2e-4, atol=2e-4)
