@@ -107,6 +107,13 @@ def run(quick: bool = True, policy: str = "auto",
     if json_path:
         with open(json_path, "w") as f:
             json.dump(results, f, indent=2, sort_keys=True)
+    # the adaptive-runtime comparison (fixed grid vs learned ladder vs
+    # continuous batching, drifting mix) rides the same `--only serve`
+    # entry; it emits its own rows and BENCH_serve_adaptive.json
+    from benchmarks import bench_serve_adaptive
+
+    results["adaptive"] = bench_serve_adaptive.run(quick=quick,
+                                                   policy=policy)
     return results
 
 

@@ -1,0 +1,200 @@
+"""Adaptive serving runtime vs the fixed grid, on a drifting mix.
+
+The fixed geometric bucket grid prices every request up by a constant
+growth factor; on mixed traffic 40–55 % of the streamed volume is
+padding (``BENCH_serve.json``).  This bench drives the same GCN serving
+workload through three configurations over a **drifting** request mix —
+phase A (small graphs), phase B (large graphs), phase C (both) — and
+reports each one's padding waste and latency:
+
+  * ``micro_fixed``     — ``BatchServingEngine``, fixed geometric grid
+                          (the status-quo baseline),
+  * ``micro_adaptive``  — same engine, quantile-learned bucket ladder
+                          (``BatchServeConfig(adaptive=True)``),
+  * ``continuous``      — ``ContinuousBatchEngine`` (adaptive ladder +
+                          slot-recycled running batches).
+
+Results land in ``BENCH_serve_adaptive.json`` (committed; refreshed as
+a CI artifact by the bench-smoke job via ``--only serve``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+JSON_PATH = "BENCH_serve_adaptive.json"
+
+
+def _make_drifting_workload(quick: bool):
+    """(params, requests) with the size mix drifting across 3 phases.
+
+    Within each phase traffic is shape-skewed — a few *hot* sizes take
+    ~75 % of the requests, a long tail the rest — the realistic serving
+    profile: the ladder parks rungs exactly on the hot shapes while the
+    geometric grid pads every one of them up by ~half a growth step.
+    """
+    from repro.configs.paper_gnn import GNNConfig
+    from repro.data.pipeline import random_graph
+    from repro.models.gnn import build_graph, init_gcn
+
+    cfg = GNNConfig(name="serve-adaptive-bench",
+                    in_features=32 if quick else 128,
+                    hidden=16 if quick else 64, n_classes=4,
+                    n_layers=2, block_m=16, block_n=16)
+    params = init_gcn(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(7)
+    per_phase = 96 if quick else 288
+    phases: List[Tuple[int, int]] = [
+        (40, 160),                      # A: small graphs
+        (200, 420 if quick else 900),   # B: traffic drifts large
+        (40, 420 if quick else 900),    # C: mixed tail
+    ]
+    requests = []
+    for p, (lo, hi) in enumerate(phases):
+        hot = rng.integers(lo, hi, size=3)
+        tail = rng.integers(lo, hi, size=8)
+        graphs = {int(n): build_graph(
+            random_graph(int(n), avg_degree=4, seed=100 * p + i), cfg)
+            for i, n in enumerate(np.concatenate([hot, tail]))}
+        for i in range(per_phase):
+            pool = hot if rng.random() < 0.75 else tail
+            g = graphs[int(pool[rng.integers(len(pool))])]
+            x = jnp.asarray(rng.normal(size=(g.n_nodes, cfg.in_features))
+                            .astype(np.float32))
+            requests.append((g, x))
+    return params, requests
+
+
+def _summarize(rep: Dict, elapsed: float, n: int) -> Dict:
+    padding = rep["executor"]["padding"]
+    out = {
+        "req_per_s_wall": n / elapsed,
+        "latency_ms_p50": rep["latency_ms_p50"],
+        "latency_ms_p99": rep["latency_ms_p99"],
+        "waste_fraction": padding["waste_fraction"],
+        "nnz_blowup": padding["nnz_blowup"],
+        "compiles": rep["executor"]["compiles"],
+        "buckets": rep["executor"]["buckets"],
+        "per_bucket_waste": {
+            k: v["waste_fraction"]
+            for k, v in padding.get("per_bucket", {}).items()},
+    }
+    if "ladder" in rep["executor"]:
+        lad = rep["executor"]["ladder"]
+        out["ladder"] = {k: lad[k] for k in
+                         ("refits", "fallbacks", "snapped_rungs",
+                          "last_drift")}
+        out["rungs"] = {d: len(r) for d, r in lad["rungs"].items()}
+    return out
+
+
+def _drive_micro(params, requests, *, policy: str, adaptive: bool) -> Dict:
+    from repro.serve.engine import BatchServeConfig, BatchServingEngine
+
+    scfg = BatchServeConfig(max_batch=32, max_delay_ms=4.0, policy=policy,
+                            adaptive=adaptive)
+    with BatchServingEngine.for_gcn(params, scfg=scfg) as eng:
+        for g, x in requests:         # warm compiles (and the ladder)
+            eng.submit(g, x)
+        eng.drain(timeout=600.0)
+        warm = eng.executor.compiles
+        eng.reset_metrics()
+        # the warm pass ran partly on the ladder's pre-fit geometric
+        # fallback; measure steady-state waste only
+        eng.executor.waste = type(eng.executor.waste)()
+        t0 = time.perf_counter()
+        futs = [eng.submit(g, x) for g, x in requests]
+        for f in futs:
+            f.result(timeout=600.0)
+        elapsed = time.perf_counter() - t0
+        out = _summarize(eng.report(), elapsed, len(requests))
+        out["steady_compiles"] = eng.executor.compiles - warm
+        return out
+
+
+def _drive_continuous(params, requests, *, policy: str) -> Dict:
+    from repro.serve.runtime import ContinuousBatchEngine, ContinuousConfig
+
+    # a wider batching window than the default lets low-traffic lanes
+    # accumulate occupants instead of stepping near-empty
+    cfg = ContinuousConfig(slots=4, policy=policy, adaptive=True,
+                           max_wait_ms=40.0)
+    with ContinuousBatchEngine.for_gcn(params, cfg=cfg) as eng:
+        for g, x in requests:         # warm pass
+            eng.submit(g, x)
+        eng.drain(timeout=600.0)
+        warm = eng.executor.compiles
+        eng.reset_metrics()
+        t0 = time.perf_counter()
+        futs = []
+        # admission keeps a backlog of a few waves, so freed slots have
+        # queued work to recycle and lanes step full — the continuous
+        # engine's intended operating point
+        backlog = 8 * cfg.slots
+        for i, (g, x) in enumerate(requests):
+            futs.append(eng.submit(g, x))
+            while eng.pending() > backlog:
+                eng.step()
+        eng.drain(timeout=600.0)
+        for f in futs:
+            f.result(timeout=600.0)
+        elapsed = time.perf_counter() - t0
+        rep = eng.report()
+        out = _summarize(rep, elapsed, len(requests))
+        out["steady_compiles"] = eng.executor.compiles - warm
+        out["lanes"] = {k: round(v["occupancy"], 3)
+                        for k, v in rep["lanes"].items()}
+        return out
+
+
+def run(quick: bool = True, policy: str = "auto",
+        json_path: Optional[str] = JSON_PATH) -> Dict:
+    params, requests = _make_drifting_workload(quick)
+    results: Dict[str, Dict] = {"n_requests": len(requests)}
+    drivers = {
+        "micro_fixed": lambda: _drive_micro(params, requests,
+                                            policy=policy, adaptive=False),
+        "micro_adaptive": lambda: _drive_micro(params, requests,
+                                               policy=policy, adaptive=True),
+        "continuous": lambda: _drive_continuous(params, requests,
+                                                policy=policy),
+    }
+    for name, fn in drivers.items():
+        rep = fn()
+        results[name] = rep
+        emit(f"serve_adaptive_{name}",
+             1e6 / max(rep["req_per_s_wall"], 1e-9),
+             f"req_per_s={rep['req_per_s_wall']:.1f};"
+             f"p50_ms={rep['latency_ms_p50']:.1f};"
+             f"p99_ms={rep['latency_ms_p99']:.1f};"
+             f"waste={rep['waste_fraction']:.3f};"
+             f"retraces={rep['steady_compiles']}")
+    fixed = results["micro_fixed"]["waste_fraction"]
+    adap = results["micro_adaptive"]["waste_fraction"]
+    results["waste_cut"] = fixed - adap
+    emit("serve_adaptive_waste_cut", 0.0,
+         f"fixed={fixed:.3f};adaptive={adap:.3f};"
+         f"continuous={results['continuous']['waste_fraction']:.3f}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--policy", default="auto")
+    ap.add_argument("--json", default=JSON_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, policy=args.policy, json_path=args.json)

@@ -8,7 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_sddmm        — Fig. 10 (SDDMM vs density, d=2, mnz sensitivity)
   bench_crossover    — Fig. 9's crossover as a dispatch-path sweep
   bench_serve        — batched-serving throughput/latency sweep (also
-                       writes BENCH_serve.json)
+                       writes BENCH_serve.json) + the adaptive-runtime
+                       comparison on a drifting mix (bench_serve_adaptive,
+                       writes BENCH_serve_adaptive.json)
   bench_fused        — fused-vs-unfused GCN epilogue + GAT attention
                        sweep (also writes BENCH_fused.json)
   bench_corpus       — structured-matrix corpus (uniform/powerlaw/rmat/

@@ -282,12 +282,19 @@ class BatchedSparseMatrix:
     @classmethod
     def from_matrices(cls, mats: Sequence[SparseMatrix], *,
                       formats: Optional[Tuple[str, ...]] = None,
+                      stats: Optional[MatrixStats] = None,
                       ) -> "BatchedSparseMatrix":
         """Compose N matrices block-diagonally (no densification).
 
         ``formats`` picks which carried forms to compose (default: every
         form all inputs share, preferring ``("ell", "csr")``); each
         requested form is concatenated with index offsets directly.
+
+        ``stats`` overrides the derived combined stats.  A continuous
+        serving lane composes the *same* bucket geometry every step, so
+        it computes the canonical combined stats once and passes them
+        here — skipping the per-step host reduction and guaranteeing the
+        jit aux is byte-identical across steps.
         """
         mats = list(mats)
         if not mats:
@@ -333,7 +340,13 @@ class BatchedSparseMatrix:
                 raise ValueError(
                     f"cannot compose {f!r} block-diagonally; supported "
                     "forms: ('ell', 'sell', 'csr')")
-        matrix = SparseMatrix(forms, shape, _combined_stats(mats, shape))
+        if stats is None:
+            stats = _combined_stats(mats, shape)
+        elif stats.shape != shape:
+            raise ValueError(
+                f"stats override has shape {stats.shape} but the "
+                f"composition is {shape}")
+        matrix = SparseMatrix(forms, shape, stats)
         return cls(matrix, tuple(segments))
 
     # -- metadata -----------------------------------------------------------

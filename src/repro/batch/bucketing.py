@@ -21,7 +21,7 @@ padded-stream blow-up) so serving reports can show the tradeoff.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,7 +34,16 @@ from repro.sparse.matrix import SparseMatrix
 
 @dataclasses.dataclass(frozen=True)
 class BucketingConfig:
-    """Geometry of the bucket grid."""
+    """Geometry of the **fixed** geometric bucket grid.
+
+    Note: the geometric grid is shape-oblivious — on real traffic it
+    wastes 40–55 % of the streamed volume as padding (see
+    ``BENCH_serve.json``).  Prefer the traffic-fitted quantile ladder
+    (``repro.serve.runtime.AdaptiveBucketLadder``, opt-in via
+    ``BatchServeConfig(adaptive=True)`` / ``ContinuousConfig``); the
+    fixed grid remains the zero-warm-up default and the ladder's
+    fallback before it has observed enough traffic to fit.
+    """
 
     growth: float = 2.0        # geometric step between node-count buckets
     nnz_growth: float = 4.0    # coarser grid for nnz (correlates with n)
@@ -60,6 +69,12 @@ class Bucket:
     @property
     def n_block_rows(self) -> int:
         return self.rows // self.block_m
+
+    @property
+    def label(self) -> str:
+        """Stable human-readable key for per-bucket reporting."""
+        return (f"r{self.rows}xc{self.cols}/nnz{self.nnz}/w{self.width}"
+                f"/b{self.block_m}x{self.block_n}")
 
 
 def quantize_up(x: int, base: int, growth: float) -> int:
@@ -210,19 +225,36 @@ def empty_in_bucket(bucket: Bucket, *, form: str,
 
 @dataclasses.dataclass
 class PaddingWaste:
-    """Streamed-but-dead volume from bucket + batch-fill padding."""
+    """Streamed-but-dead volume from bucket + batch-fill padding.
+
+    Besides the aggregate counters, waste is broken down **per bucket**
+    (keyed by :attr:`Bucket.label`) when callers tag their ``add`` with
+    the bucket served — the aggregate ``waste_fraction`` hides *which*
+    rungs of the grid are mis-sized, and the per-rung view is what the
+    adaptive ladder is validated against.
+    """
 
     real_rows: int = 0
     padded_rows: int = 0
     real_nnz: int = 0
     padded_nnz: int = 0
+    per_bucket: Dict[str, "PaddingWaste"] = dataclasses.field(
+        default_factory=dict)
 
     def add(self, *, real_rows: int, padded_rows: int, real_nnz: int,
-            padded_nnz: int) -> None:
+            padded_nnz: int,
+            bucket: Optional[Union[Bucket, str]] = None) -> None:
         self.real_rows += int(real_rows)
         self.padded_rows += int(padded_rows)
         self.real_nnz += int(real_nnz)
         self.padded_nnz += int(padded_nnz)
+        if bucket is not None:
+            key = bucket if isinstance(bucket, str) else bucket.label
+            sub = self.per_bucket.get(key)
+            if sub is None:
+                sub = self.per_bucket[key] = PaddingWaste()
+            sub.add(real_rows=real_rows, padded_rows=padded_rows,
+                    real_nnz=real_nnz, padded_nnz=padded_nnz)
 
     @property
     def row_blowup(self) -> float:
@@ -239,8 +271,8 @@ class PaddingWaste:
             return 0.0
         return 1.0 - self.real_nnz / self.padded_nnz
 
-    def as_dict(self) -> dict:
-        return {
+    def as_dict(self, *, per_bucket: bool = True) -> dict:
+        out = {
             "real_rows": self.real_rows,
             "padded_rows": self.padded_rows,
             "real_nnz": self.real_nnz,
@@ -249,3 +281,9 @@ class PaddingWaste:
             "nnz_blowup": round(self.nnz_blowup, 4),
             "waste_fraction": round(self.waste_fraction, 4),
         }
+        if per_bucket and self.per_bucket:
+            out["per_bucket"] = {
+                k: self.per_bucket[k].as_dict(per_bucket=False)
+                for k in sorted(self.per_bucket)
+            }
+        return out

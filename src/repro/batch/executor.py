@@ -80,6 +80,7 @@ class BucketedExecutor:
                  max_executors: int = 64,
                  bucketing: BucketingConfig = DEFAULT_BUCKETING,
                  cost_model: CostModel = DEFAULT_COST_MODEL,
+                 ladder: Any = None,
                  jit: bool = True):
         if form not in ("auto", "csr", "ell"):
             raise ValueError(
@@ -94,6 +95,10 @@ class BucketedExecutor:
         self.max_executors = int(max_executors)
         self.bucketing = bucketing
         self.cost_model = cost_model
+        # opt-in traffic-fitted bucket grid (an AdaptiveBucketLadder,
+        # see repro.serve.runtime.ladder); None = the fixed geometric
+        # grid, which needs no warm-up and stays the default
+        self.ladder = ladder
         self.jit = jit
         self._executors: "collections.OrderedDict[ExecutorKey, Callable]" \
             = collections.OrderedDict()
@@ -105,8 +110,17 @@ class BucketedExecutor:
 
     # -- planning -----------------------------------------------------------
 
-    def _choose_form(self, bucket: Bucket, d: int,
-                     carried: Sequence[str]) -> Tuple[str, str]:
+    def bucket_of(self, stats) -> Bucket:
+        """The compile-grid cell a request with these stats pads into
+        (the learned ladder when one is configured, else the fixed
+        geometric grid)."""
+        if self.ladder is not None:
+            self.ladder.observe(stats)
+            return self.ladder.bucket_for(stats)
+        return bucket_for(stats, self.bucketing)
+
+    def choose_form(self, bucket: Bucket, d: int,
+                    carried: Sequence[str]) -> Tuple[str, str]:
         """(form to pad, path to run) for one bucket."""
         if self.policy in ("csr", "ell"):
             if self.policy not in carried:
@@ -129,6 +143,13 @@ class BucketedExecutor:
                              cost_model=self.cost_model, candidates=cand)
             form = plan.path
         return form, form
+
+    def executor_for(self, key: ExecutorKey) -> Callable:
+        """The jitted program serving one (bucket, batch, d, form) cell
+        (LRU-cached; tracing bumps ``compiles``).  Public so runtimes
+        that manage their own batch composition (the continuous engine)
+        can share this compile cache."""
+        return self._executor_for(key)
 
     def _executor_for(self, key: ExecutorKey) -> Callable:
         cached = self._executors.get(key)
@@ -185,7 +206,7 @@ class BucketedExecutor:
                 raise ValueError(
                     f"request {i}: features {h.shape} do not match matrix "
                     f"{m.shape}")
-            bucket = bucket_for(m.stats, self.bucketing)
+            bucket = self.bucket_of(m.stats)
             groups.setdefault((bucket, int(h.shape[1])), []).append(i)
         out: List[Optional[np.ndarray]] = [None] * len(mats)
         for (bucket, d), idxs in groups.items():
@@ -198,7 +219,7 @@ class BucketedExecutor:
                    mats, hs, out) -> None:
         carried = [f for f in ("ell", "csr")
                    if all(mats[i].has_form(f) for i in idxs)]
-        form, path = self._choose_form(bucket, d, carried)
+        form, path = self.choose_form(bucket, d, carried)
         bs = _quantize_batch(len(idxs), self.max_batch)
         dtype = hs[idxs[0]].dtype
         padded = [pad_to_bucket(mats[i], bucket, form=form) for i in idxs]
@@ -217,7 +238,8 @@ class BucketedExecutor:
         real_nnz = sum(mats[i].stats.nnz for i in idxs)
         real_rows = sum(mats[i].shape[0] for i in idxs)
         self.waste.add(real_rows=real_rows, padded_rows=bs * bucket.rows,
-                       real_nnz=real_nnz, padded_nnz=bs * bucket.nnz)
+                       real_nnz=real_nnz, padded_nnz=bs * bucket.nnz,
+                       bucket=bucket)
         for slot, i in enumerate(idxs):
             lo = slot * bucket.rows
             out[i] = np.asarray(y[lo:lo + mats[i].shape[0]])
@@ -225,7 +247,7 @@ class BucketedExecutor:
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> Dict[str, Any]:
-        return {
+        out = {
             "requests": self.requests,
             "calls": self.calls,
             "compiles": self.compiles,
@@ -234,3 +256,6 @@ class BucketedExecutor:
             "buckets": len({k.bucket for k in self._executors}),
             "padding": self.waste.as_dict(),
         }
+        if self.ladder is not None:
+            out["ladder"] = self.ladder.report()
+        return out

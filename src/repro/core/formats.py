@@ -329,7 +329,8 @@ def _quantize_width(w: int) -> int:
     return int(_width_ladder(w)[-1])
 
 
-def _sell_row_order(row_nnz: np.ndarray, c: int, sigma: int
+def _sell_row_order(row_nnz: np.ndarray, c: int, sigma: int,
+                    width_slack: int = 0
                     ) -> Tuple[np.ndarray, np.ndarray]:
     """(row order, quantized slice widths) of the SELL-C-σ packing.
 
@@ -339,6 +340,12 @@ def _sell_row_order(row_nnz: np.ndarray, c: int, sigma: int
     nonzero counts — `MatrixStats` uses it to price the layout without
     packing anything, so it runs on every stats construction and stays
     vectorized.
+
+    ``width_slack`` reserves that many extra (zero) slots per row of
+    every non-empty slice *before* quantization — the mutable-overlay
+    headroom ``DeltaGraph`` patches edge inserts into.  The default 0
+    reproduces the historical packing exactly (and is what the stats
+    layer prices).
     """
     m = len(row_nnz)
     mp = _cdiv(max(m, 1), c) * c
@@ -351,10 +358,11 @@ def _sell_row_order(row_nnz: np.ndarray, c: int, sigma: int
     ]) if mp else np.zeros(0, np.int64)
     slice_max = padded[order].reshape(-1, c).max(axis=1) if mp \
         else np.zeros(0, np.int64)
-    ladder = _width_ladder(int(slice_max.max()) if len(slice_max) else 1)
+    target = np.where(slice_max > 0, slice_max + int(width_slack), 0)
+    ladder = _width_ladder(int(target.max()) if len(target) else 1)
     widths = np.where(
-        slice_max > 0,
-        ladder[np.searchsorted(ladder, slice_max, side="left")
+        target > 0,
+        ladder[np.searchsorted(ladder, target, side="left")
                .clip(max=len(ladder) - 1)],
         0)
     return order, widths
@@ -491,17 +499,21 @@ class SellCS:
     @staticmethod
     def from_dense(dense: np.ndarray, *, c: int = SELL_C,
                    sigma: int = SELL_SIGMA,
-                   block: Tuple[int, int] = (64, 64)) -> "SellCS":
+                   block: Tuple[int, int] = (64, 64),
+                   width_slack: int = 0) -> "SellCS":
         """Pack a concrete dense matrix into SELL-C-σ.
 
         ``block`` sets the (bm, bn) tile geometry of the kernel view; it
-        is independent of the slice height ``c``.
+        is independent of the slice height ``c``.  ``width_slack``
+        reserves extra zero slots per row of every non-empty slice (the
+        in-place-patchable headroom a ``DeltaGraph`` overlay consumes);
+        0 keeps the historical packing.
         """
         dense = np.asarray(dense)
         m, n = dense.shape
         bm, bn = block
         row_nnz = (dense != 0).sum(axis=1)
-        order, widths = _sell_row_order(row_nnz, c, sigma)
+        order, widths = _sell_row_order(row_nnz, c, sigma, width_slack)
         mp = len(order)
 
         # group equal-width slices into buckets (ascending width); the

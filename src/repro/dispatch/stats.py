@@ -99,6 +99,31 @@ class MatrixStats:
         m_pad = self.n_block_rows * max(self.block_m, 1)
         return max(self.stored_elements, m_pad * self.max_row_nnz)
 
+    def with_capacity(self, capacity: int) -> "MatrixStats":
+        """Stats restated at a mutable overlay's **slot capacity**.
+
+        A :class:`repro.serve.runtime.DeltaGraph` patches edge deltas
+        into reserved slack slots without changing any array shape, so
+        the stats its served matrix carries must stay *constant* between
+        repacks — otherwise every delta would change the jit aux and
+        retrace every consumer.  The stable choice is to price the
+        overlay at its capacity (live + slack slots): conservative for
+        every per-element path, and exactly what the layout streams once
+        tombstones and free slots are counted.  The planner re-prices
+        from exact live stats at repack boundaries (see
+        ``DeltaGraph.exact_stats``).
+        """
+        cap = int(capacity)
+        if cap < self.nnz:
+            raise ValueError(
+                f"capacity {cap} < live nnz {self.nnz}; an overlay "
+                "cannot hold fewer slots than stored elements")
+        return dataclasses.replace(
+            self, nnz=cap,
+            stored_elements=max(self.stored_elements, cap),
+            sell_stored_elements=(max(self.sell_stored_elements, cap)
+                                  if self.sell_stored_elements else 0))
+
     # -- constructors -------------------------------------------------------
 
     @staticmethod

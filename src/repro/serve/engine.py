@@ -217,6 +217,12 @@ class BatchServeConfig:
     max_executors: int = 64    # LRU cap on cached jitted executors
     growth: float = 2.0        # bucket grid growth factor
     fuse: bool = True          # fused epilogue inside the GCN executor
+    # opt into the traffic-fitted bucket grid (an AdaptiveBucketLadder
+    # replaces the fixed geometric grid once it has observed enough
+    # traffic; see repro.serve.runtime).  ``ladder`` overrides its
+    # LadderConfig.
+    adaptive: bool = False
+    ladder: Any = None
 
 
 @dataclasses.dataclass
@@ -253,6 +259,16 @@ class BatchServingEngine:
         from repro.batch.bucketing import BucketingConfig
 
         self.scfg = scfg or BatchServeConfig()
+        ladder = None
+        if self.scfg.adaptive:
+            from repro.serve.runtime.ladder import (AdaptiveBucketLadder,
+                                                    LadderConfig)
+
+            lcfg = self.scfg.ladder
+            if lcfg is None:
+                lcfg = LadderConfig()
+            ladder = (lcfg if isinstance(lcfg, AdaptiveBucketLadder)
+                      else AdaptiveBucketLadder(lcfg))
         self.executor = BucketedExecutor(
             fn,
             context=context,
@@ -261,6 +277,7 @@ class BatchServingEngine:
             max_batch=self.scfg.max_batch,
             max_executors=self.scfg.max_executors,
             bucketing=BucketingConfig(growth=self.scfg.growth),
+            ladder=ladder,
         )
         self._queue: "queue_mod.Queue[_Request]" = queue_mod.Queue(
             maxsize=self.scfg.queue_depth)
@@ -331,43 +348,60 @@ class BatchServingEngine:
     # -- worker -------------------------------------------------------------
 
     def _serve_loop(self) -> None:
-        # a negative max_delay_ms must degrade to greedy (immediate)
-        # flushing, never reach Queue.get as a negative timeout — that
-        # raises ValueError, kills the worker thread, and strands every
-        # queued future with no error
-        window_s = max(self.scfg.max_delay_ms, 0.0) / 1e3
         while not self._stop.is_set():
             try:
                 first = self._queue.get(timeout=0.05)
             except queue_mod.Empty:
                 continue
             batch = [first]
-            # the window anchors at the oldest request's *submit* time
-            # (queue wait already spent counts against the deadline);
-            # requests already queued are always taken — the deadline
-            # only bounds how long we *wait* for more
-            deadline = first.t_submit + window_s
-            while len(batch) < self.scfg.max_batch:
-                try:
-                    batch.append(self._queue.get_nowait())
-                    continue
-                except queue_mod.Empty:
-                    pass
-                # clamped to [0, window]: a slow request — one that sat
-                # queued past its whole window while the worker flushed
-                # an earlier batch — yields a *negative* remainder and
-                # must flush now, not wait; the upper clamp bounds any
-                # single wait to one window regardless of timestamp skew
-                remaining = min(deadline - time.perf_counter(), window_s)
-                if remaining <= 0:
-                    break
-                try:
-                    batch.append(self._queue.get(timeout=remaining))
-                except queue_mod.Empty:
-                    break
-            self._flushes["full" if len(batch) >= self.scfg.max_batch
-                          else "deadline"] += 1
-            self._flush(batch)
+            try:
+                self._collect_and_flush(batch)
+            except BaseException as exc:  # noqa: BLE001 — worker dying
+                # (KeyboardInterrupt, MemoryError, ...) must not strand
+                # the futures it already picked up: resolve them with
+                # the error before the thread unwinds
+                for r in batch:
+                    with self._close_lock:
+                        self._completed += 1
+                        self._failed += 1
+                    if not r.future.done() and not r.future.cancelled():
+                        r.future.set_exception(
+                            RuntimeError(f"serving worker died: {exc!r}"))
+                raise
+
+    def _collect_and_flush(self, batch: List[_Request]) -> None:
+        # a negative max_delay_ms must degrade to greedy (immediate)
+        # flushing, never reach Queue.get as a negative timeout — that
+        # raises ValueError, kills the worker thread, and strands every
+        # queued future with no error
+        window_s = max(self.scfg.max_delay_ms, 0.0) / 1e3
+        first = batch[0]
+        # the window anchors at the oldest request's *submit* time
+        # (queue wait already spent counts against the deadline);
+        # requests already queued are always taken — the deadline
+        # only bounds how long we *wait* for more
+        deadline = first.t_submit + window_s
+        while len(batch) < self.scfg.max_batch:
+            try:
+                batch.append(self._queue.get_nowait())
+                continue
+            except queue_mod.Empty:
+                pass
+            # clamped to [0, window]: a slow request — one that sat
+            # queued past its whole window while the worker flushed
+            # an earlier batch — yields a *negative* remainder and
+            # must flush now, not wait; the upper clamp bounds any
+            # single wait to one window regardless of timestamp skew
+            remaining = min(deadline - time.perf_counter(), window_s)
+            if remaining <= 0:
+                break
+            try:
+                batch.append(self._queue.get(timeout=remaining))
+            except queue_mod.Empty:
+                break
+        self._flushes["full" if len(batch) >= self.scfg.max_batch
+                      else "deadline"] += 1
+        self._flush(batch)
 
     def _flush(self, batch: List[_Request]) -> None:
         try:
@@ -397,6 +431,16 @@ class BatchServingEngine:
         """Block until everything submitted so far has completed."""
         t0 = time.perf_counter()
         while self._completed < self._submitted:
+            if not self._worker.is_alive() and not self._stop.is_set():
+                # a dead worker can never complete the backlog: fail the
+                # queued futures now instead of spinning to the timeout
+                self._fail_queued()
+                if self._completed < self._submitted:
+                    raise RuntimeError(
+                        "drain: serving worker died with "
+                        f"{self._submitted - self._completed} requests "
+                        "in flight")
+                return
             if time.perf_counter() - t0 > timeout:
                 raise TimeoutError(
                     f"drain: {self._submitted - self._completed} requests "
@@ -432,6 +476,19 @@ class BatchServingEngine:
                 req.future.set_exception(RuntimeError("engine closed"))
 
     def close(self) -> None:
+        """Shut down, leaving no future unresolved.
+
+        Everything admitted before close is *drained* — the worker keeps
+        flushing until the queue is empty, so already-submitted requests
+        get their results, not an error.  Only if the drain cannot
+        finish (dead worker, timeout) are the leftovers failed; either
+        way every future resolves and no caller blocks forever.
+        """
+        if not self._stop.is_set():
+            try:
+                self.drain()
+            except Exception:  # noqa: BLE001 — still sweep below
+                pass
         self._stop.set()
         self._worker.join(timeout=5.0)
         self._fail_queued()

@@ -1,0 +1,30 @@
+"""Adaptive serving runtime.
+
+Three cooperating pieces that move serving from static, rebuild-heavy
+batching to an online-adaptive runtime (see DESIGN.md, "Adaptive
+serving runtime"):
+
+* :class:`AdaptiveBucketLadder` — quantile-learned bucket grid fit from
+  observed request shapes, re-fit on traffic drift with hysteresis and
+  warm-executor carryover.
+* :class:`ContinuousBatchEngine` — admission into a running
+  block-diagonal batch: fixed slot pools, per-slot completion, freed
+  slots recycled without retracing.
+* :class:`DeltaGraph` — mutable CSR/SELL overlay absorbing edge
+  insert/delete deltas in place (slack slots, tombstones, sentinel
+  remap), with stats invalidation and background repack.
+"""
+from repro.serve.runtime.continuous import (ContinuousBatchEngine,
+                                            ContinuousConfig)
+from repro.serve.runtime.delta import DeltaGraph
+from repro.serve.runtime.ladder import (AdaptiveBucketLadder,
+                                        DEFAULT_LADDER, LadderConfig)
+
+__all__ = [
+    "AdaptiveBucketLadder",
+    "ContinuousBatchEngine",
+    "ContinuousConfig",
+    "DEFAULT_LADDER",
+    "DeltaGraph",
+    "LadderConfig",
+]

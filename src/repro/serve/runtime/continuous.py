@@ -1,0 +1,457 @@
+"""Continuous batching: admission into a running block-diagonal batch.
+
+The micro-batching engine (``repro.serve.engine.BatchServingEngine``)
+holds every request until a flush fires (batch full or deadline), then
+composes and executes the whole window at once — arrivals during an
+execution wait a full window, and a straggler bucket delays the flush
+for everyone.  ``ContinuousBatchEngine`` removes the window: requests
+are admitted *into a running batch* the moment a slot is free.
+
+Mechanics (all shapes static — the engine never retraces on occupancy):
+
+* Traffic is partitioned into **lanes** keyed by ``(bucket, d)``.  A
+  lane owns a fixed pool of ``slots`` request slots, one cached
+  all-zero dummy matrix, and one jitted executor (shared with the
+  :class:`repro.batch.BucketedExecutor` LRU under the key
+  ``ExecutorKey(bucket, slots, d, form)``).
+* Every :meth:`step` composes exactly ``slots`` matrices — occupied
+  slots contribute their admission-padded matrix, free slots the cached
+  dummy.  The occupancy mask is therefore *data* (zero blocks), never
+  *shape*: as requests come and go, the executor sees byte-identical
+  static metadata (the lane's precomputed combined canonical stats ride
+  through :meth:`BatchedSparseMatrix.from_matrices`'s ``stats=``
+  override) and never recompiles.
+* Requests complete **per slot**: a finished slot resolves its future
+  and is immediately recycled to the lane's wait queue; its neighbors
+  keep stepping undisturbed.  Multi-step requests (``steps > 1``, e.g.
+  power iteration / multi-hop propagation) feed their padded output
+  back in as the next step's features and occupy the slot until done —
+  heterogeneous step counts coexist in one lane.
+
+Padding is paid once per request at admission (``pad_to_bucket`` +
+feature row padding), not once per flush.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.batch.block_diag import BatchedSparseMatrix
+from repro.batch.bucketing import (Bucket, canonical_stats, empty_in_bucket,
+                                   pad_to_bucket)
+from repro.batch.executor import BucketedExecutor, ExecutorKey
+from repro.dispatch.stats import MatrixStats
+from repro.serve.runtime.ladder import (AdaptiveBucketLadder, LadderConfig,
+                                        DEFAULT_LADDER)
+from repro.sparse import paths
+
+Array = Any
+
+
+@dataclasses.dataclass
+class ContinuousConfig:
+    """Slot-pool and grid knobs of the continuous engine."""
+
+    slots: int = 8             # slot pool per (bucket, d) lane
+    policy: str = "auto"       # dispatch policy inside the executor
+    form: str = "auto"         # bucket form: auto | csr | ell
+    max_executors: int = 64    # LRU cap on cached jitted executors
+    queue_depth: int = 1024    # per-lane wait queue bound
+    adaptive: bool = True      # learn the bucket grid from traffic
+    ladder: LadderConfig = DEFAULT_LADDER
+    background: bool = False   # run a stepping thread (else call step())
+    idle_sleep_s: float = 0.5e-3
+    # a lane executes when its slot pool is full OR its oldest occupant
+    # has waited this long — hot lanes run packed, cold lanes still
+    # bound their latency (the continuous analog of max_delay_ms)
+    max_wait_ms: float = 5.0
+
+
+@dataclasses.dataclass
+class _SlotReq:
+    """One admitted request, padded into its lane's bucket."""
+
+    matrix: Any                # bucket-padded SparseMatrix
+    features: Any              # [bucket.cols, d] (padded)
+    future: Future
+    t_submit: float
+    remaining: int             # steps left to run
+    rows_logical: int          # rows to trim the final output to
+    real_rows: int
+    real_nnz: int
+
+
+class _Lane:
+    """Fixed-capacity slot pool serving one (bucket, d) cell."""
+
+    def __init__(self, bucket: Bucket, d: int, form: str, n_slots: int,
+                 dtype, queue_depth: int):
+        self.bucket = bucket
+        self.d = d
+        self.form = form
+        self.dtype = dtype
+        self.key = ExecutorKey(bucket=bucket, batch=n_slots, d=d, form=form)
+        self.slots: List[Optional[_SlotReq]] = [None] * n_slots
+        self.queue: Deque[_SlotReq] = collections.deque()
+        self.queue_depth = queue_depth
+        self.dummy = empty_in_bucket(bucket, form=form, dtype=dtype)
+        self.zero_h = jnp.zeros((bucket.cols, d), dtype)
+        # combined canonical stats of `n_slots` bucket copies — computed
+        # once so every step's composition carries byte-identical aux
+        cs = canonical_stats(bucket)
+        self.stats = MatrixStats(
+            shape=(n_slots * bucket.rows, n_slots * bucket.cols),
+            nnz=n_slots * cs.nnz,
+            stored_elements=n_slots * cs.stored_elements,
+            block_m=cs.block_m, block_n=cs.block_n,
+            n_block_rows=n_slots * cs.n_block_rows,
+            ell_width=cs.ell_width, occupancy=cs.occupancy)
+        self.steps = 0
+        self.slot_steps = 0        # slots * steps (streamed capacity)
+        self.occupied_steps = 0    # occupied slot-steps (useful volume)
+
+    @property
+    def occupancy(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    def admit(self, req: _SlotReq) -> bool:
+        """Seat the request in a free slot, else queue it (False when
+        the wait queue is full — caller backpressures)."""
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                return True
+        if len(self.queue) >= self.queue_depth:
+            return False
+        self.queue.append(req)
+        return True
+
+    def recycle(self) -> None:
+        """Seat queued requests into freed slots."""
+        for i, s in enumerate(self.slots):
+            if s is None and self.queue:
+                self.slots[i] = self.queue.popleft()
+
+
+class ContinuousBatchEngine:
+    """Serves (graph, features) traffic by admission into running
+    block-diagonal batches (see module docstring).
+
+    ``fn(matrix, h)`` is the per-batch program (default: the planned
+    ``matrix @ h``); with ``context`` set it is called
+    ``fn(context, matrix, h)`` — the same contract as
+    :class:`repro.batch.BucketedExecutor`, whose compile cache this
+    engine shares.
+    """
+
+    def __init__(self, fn: Optional[Callable] = None, *,
+                 context: Any = None,
+                 cfg: Optional[ContinuousConfig] = None):
+        self.cfg = cfg or ContinuousConfig()
+        self.ladder: Optional[AdaptiveBucketLadder] = (
+            AdaptiveBucketLadder(self.cfg.ladder)
+            if self.cfg.adaptive else None)
+        self.executor = BucketedExecutor(
+            fn, context=context,
+            form=self.cfg.form, policy=self.cfg.policy,
+            max_batch=self.cfg.slots,
+            max_executors=self.cfg.max_executors,
+            ladder=self.ladder)
+        self._lanes: Dict[Tuple[Bucket, int], _Lane] = {}
+        self._lock = threading.RLock()
+        self._latencies_ms: List[float] = []
+        self.submitted = 0
+        self.completed = 0
+        self.failed = 0
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        if self.cfg.background:
+            self._worker = threading.Thread(
+                target=self._step_loop, name="continuous-serve", daemon=True)
+            self._worker.start()
+
+    @classmethod
+    def for_gcn(cls, params, *, cfg: Optional[ContinuousConfig] = None
+                ) -> "ContinuousBatchEngine":
+        """Engine running a shared-weight GCN over each running batch."""
+        from repro.models.gnn import Graph, gcn_forward
+
+        c = cfg or ContinuousConfig()
+        policy = c.policy
+
+        def fwd(p, mat, h):
+            g = Graph(adj=mat, n_nodes=mat.shape[0])
+            return gcn_forward(p, g, h, policy=policy)
+
+        return cls(fwd, context=params, cfg=c)
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, matrix, features, *, steps: int = 1) -> Future:
+        """Admit one request; resolves to [n_nodes, d_out] (numpy).
+
+        ``steps > 1`` re-feeds the output as the next step's features
+        (requires a square bucket and ``d_out == d``) — the request
+        holds its slot until all steps ran.
+        """
+        if self._stop.is_set():
+            raise RuntimeError("engine is closed")
+        adj = getattr(matrix, "adj", matrix)
+        if adj.stats is None:
+            raise ValueError(
+                "continuous serving needs matrices with stats "
+                "(construct with SparseMatrix.from_dense/from_*)")
+        h = jnp.asarray(features)
+        if h.ndim != 2 or h.shape[0] != adj.shape[1]:
+            raise ValueError(
+                f"features {h.shape} do not match matrix {adj.shape}")
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
+        fut: Future = Future()
+        with self._lock:
+            bucket = self.executor.bucket_of(adj.stats)
+            d = int(h.shape[1])
+            if steps > 1 and bucket.rows != bucket.cols:
+                raise ValueError(
+                    f"steps={steps} needs a square bucket to re-feed the "
+                    f"output; got {bucket.rows}x{bucket.cols}")
+            lane = self._lanes.get((bucket, d))
+            if lane is None:
+                carried = [f for f in ("ell", "csr") if adj.has_form(f)]
+                form, _ = self.executor.choose_form(bucket, d, carried)
+                lane = _Lane(bucket, d, form, self.cfg.slots, h.dtype,
+                             self.cfg.queue_depth)
+                self._lanes[(bucket, d)] = lane
+            mat = adj if adj.has_form(lane.form) else adj.to(lane.form)
+            req = _SlotReq(
+                matrix=pad_to_bucket(mat, bucket, form=lane.form),
+                features=paths.pad_rows(h.astype(lane.dtype), bucket.cols),
+                future=fut, t_submit=time.perf_counter(),
+                remaining=steps, rows_logical=adj.shape[0],
+                real_rows=adj.shape[0], real_nnz=adj.stats.nnz)
+            if not lane.admit(req):
+                raise RuntimeError(
+                    f"lane {bucket.label}/d{d} wait queue is full "
+                    f"({lane.queue_depth})")
+            self.submitted += 1
+        return fut
+
+    def infer(self, matrix, features, *, steps: int = 1) -> np.ndarray:
+        """Synchronous convenience: submit, step to completion, return."""
+        fut = self.submit(matrix, features, steps=steps)
+        if self._worker is None:
+            while not fut.done():
+                # a step may complete nothing yet still make progress
+                # (multi-step requests hold their slot) — stall only
+                # when no lane has work at all
+                if self.step(force=True) == 0 and not fut.done():
+                    with self._lock:
+                        stalled = all(l.occupancy == 0
+                                      for l in self._lanes.values())
+                    if stalled:
+                        raise RuntimeError(
+                            "request did not complete but no lane has work")
+        return fut.result()
+
+    # -- stepping -----------------------------------------------------------
+
+    def step(self, *, force: bool = False) -> int:
+        """Run one execution over every *ready* lane (slot pool full,
+        or oldest occupant past ``max_wait_ms`` — ``force`` runs any
+        lane with occupants); resolve finished slots and recycle them.
+        Returns requests completed."""
+        now = time.perf_counter()
+        wait_s = self.cfg.max_wait_ms / 1e3
+        with self._lock:
+            lanes = []
+            for lane in self._lanes.values():
+                occupants = [s for s in lane.slots if s is not None]
+                if not occupants:
+                    continue
+                if (force or len(occupants) == len(lane.slots)
+                        or now - min(s.t_submit for s in occupants)
+                        >= wait_s):
+                    lanes.append(lane)
+        done = 0
+        for lane in lanes:
+            done += self._step_lane(lane)
+        return done
+
+    def _step_lane(self, lane: _Lane) -> int:
+        with self._lock:
+            occupants = [(i, s) for i, s in enumerate(lane.slots)
+                         if s is not None]
+            if not occupants:
+                return 0
+            mats = [s.matrix if s is not None else lane.dummy
+                    for s in lane.slots]
+            feats = [s.features if s is not None else lane.zero_h
+                     for s in lane.slots]
+        B = BatchedSparseMatrix.from_matrices(
+            mats, formats=(lane.form,), stats=lane.stats)
+        h = jnp.concatenate(feats, axis=0)
+        exe = self.executor.executor_for(lane.key)
+        args = (B.matrix, h) if self.executor.context is None \
+            else (self.executor.context, B.matrix, h)
+        try:
+            y = exe(*args)
+        except Exception as exc:  # noqa: BLE001 — fail the whole lane step
+            return self._fail_lane(lane, occupants, exc)
+        t_done = time.perf_counter()
+        bucket = lane.bucket
+        with self._lock:
+            self.executor.calls += 1
+            lane.steps += 1
+            lane.slot_steps += len(lane.slots)
+            lane.occupied_steps += len(occupants)
+            self.executor.waste.add(
+                real_rows=sum(s.real_rows for _, s in occupants),
+                padded_rows=len(lane.slots) * bucket.rows,
+                real_nnz=sum(s.real_nnz for _, s in occupants),
+                padded_nnz=len(lane.slots) * bucket.nnz,
+                bucket=bucket)
+            done = 0
+            for i, s in occupants:
+                lo = i * bucket.rows
+                block = y[lo:lo + bucket.rows]
+                s.remaining -= 1
+                if s.remaining <= 0:
+                    self.completed += 1
+                    self.executor.requests += 1
+                    done += 1
+                    lane.slots[i] = None
+                    self._latencies_ms.append((t_done - s.t_submit) * 1e3)
+                    if not s.future.cancelled():
+                        s.future.set_result(
+                            np.asarray(block[:s.rows_logical]))
+                    continue
+                if block.shape != s.features.shape:
+                    self.completed += 1
+                    self.failed += 1
+                    done += 1
+                    lane.slots[i] = None
+                    if not s.future.cancelled():
+                        s.future.set_exception(ValueError(
+                            f"multi-step request: step output {block.shape}"
+                            f" cannot re-feed features {s.features.shape}"
+                            " (d_out must equal d)"))
+                    continue
+                s.features = block
+            lane.recycle()
+        return done
+
+    def _fail_lane(self, lane: _Lane, occupants, exc: Exception) -> int:
+        with self._lock:
+            for i, s in occupants:
+                self.completed += 1
+                self.failed += 1
+                lane.slots[i] = None
+                if not s.future.cancelled():
+                    s.future.set_exception(exc)
+            lane.recycle()
+        return len(occupants)
+
+    def _step_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.step() == 0:
+                # nothing ready (idle, or occupants still inside their
+                # batching window) — back off briefly
+                time.sleep(self.cfg.idle_sleep_s)
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def pending(self) -> int:
+        with self._lock:
+            return self.submitted - self.completed
+
+    def drain(self, timeout: float = 60.0) -> None:
+        """Step (or wait on the background thread) until every admitted
+        request has resolved."""
+        t0 = time.perf_counter()
+        while self.pending() > 0:
+            if time.perf_counter() - t0 > timeout:
+                raise TimeoutError(
+                    f"drain: {self.pending()} requests still pending "
+                    f"after {timeout}s")
+            if self._worker is None:
+                self.step(force=True)
+            else:
+                time.sleep(0.002)
+
+    def close(self) -> None:
+        """Drain in-flight work, then stop.  Every future submitted
+        before close resolves — with its result when the drain
+        succeeds, with an error otherwise; none is left hanging."""
+        try:
+            self.drain()
+        except Exception:  # noqa: BLE001 — still fail the leftovers below
+            pass
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join(timeout=5.0)
+        with self._lock:
+            for lane in self._lanes.values():
+                leftovers = ([s for s in lane.slots if s is not None]
+                             + list(lane.queue))
+                lane.slots = [None] * len(lane.slots)
+                lane.queue.clear()
+                for s in leftovers:
+                    self.completed += 1
+                    self.failed += 1
+                    if not s.future.cancelled():
+                        s.future.set_exception(
+                            RuntimeError("engine closed"))
+
+    def __enter__(self) -> "ContinuousBatchEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def reset_metrics(self) -> None:
+        """Zero traffic counters (keep compiled executors and lanes)."""
+        if self.pending():
+            raise RuntimeError("reset_metrics with requests in flight; "
+                               "drain() first")
+        with self._lock:
+            self._latencies_ms.clear()
+            self.submitted = self.completed = self.failed = 0
+            for lane in self._lanes.values():
+                lane.steps = lane.slot_steps = lane.occupied_steps = 0
+            self.executor.waste = type(self.executor.waste)()
+            self.executor.calls = self.executor.requests = 0
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        with self._lock:
+            lat = np.asarray(self._latencies_ms, np.float64)
+            lanes = {}
+            for (bucket, d), lane in self._lanes.items():
+                lanes[f"{bucket.label}/d{d}"] = {
+                    "form": lane.form,
+                    "slots": len(lane.slots),
+                    "steps": lane.steps,
+                    "occupancy": (lane.occupied_steps
+                                  / max(lane.slot_steps, 1)),
+                    "queued": len(lane.queue),
+                }
+            return {
+                "submitted": self.submitted,
+                "completed": self.completed,
+                "failed": self.failed,
+                "pending": self.submitted - self.completed,
+                "latency_ms_p50": (float(np.percentile(lat, 50))
+                                   if len(lat) else 0.0),
+                "latency_ms_p99": (float(np.percentile(lat, 99))
+                                   if len(lat) else 0.0),
+                "lanes": lanes,
+                "executor": self.executor.report(),
+            }

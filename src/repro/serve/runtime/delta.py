@@ -1,0 +1,484 @@
+"""DeltaGraph: a mutable overlay applying edge deltas in place.
+
+Serving workloads over evolving graphs (recommendation, streaming GNNs)
+see a trickle of edge inserts/deletes between queries.  Rebuilding the
+packed layout per delta is O(nnz) host work *and* — because
+``MatrixStats`` ride the jit cache key — a retrace of every consumer.
+``DeltaGraph`` absorbs deltas by **patching slots in place**:
+
+* **Slack slots**: the overlay reserves spare zero slots at pack time
+  (a slack fraction of extra triplet rows for csr; ``width_slack``
+  extra slots per row of every kept SELL slice).  An insert claims a
+  free slot and writes the new coordinate/value into it.
+* **Tombstones**: a delete zeroes its slot's value.  Every consuming
+  path multiplies by the stored value (``spmm_elements``,
+  ``sddmm_elements``, the sell reference and kernels mask against
+  ``slot_vals``), so a tombstone contributes exactly 0 — no compaction
+  needed until repack.
+* **Sentinel remap (sell)**: the tile view mirrors each patch — an
+  insert maps its tile cell to the claimed slot
+  (``tile_slot_map``/``slot_tile_pos``), a delete resets cell and slot
+  back to the layout's dead sentinels.  Slot count, tile count and all
+  static aux stay bit-identical, so the kernel route stays valid.
+
+Between repacks the served matrix carries **capacity stats**
+(:meth:`MatrixStats.with_capacity` — constant regardless of the live
+edge count), so consumers under ``jax.jit`` NEVER retrace on a delta.
+The price is that the planner keeps pricing the overlay at capacity;
+:attr:`exact_stats` (lazily recomputed, ``stats_invalidations``
+counter) exposes the live structure, and every **repack** re-stamps
+fresh measured stats + a fresh plan memo so the planner re-prices at
+exactly the boundaries where a retrace already happens.
+
+A repack runs when slack is exhausted (an insert finds no free slot —
+for sell also: target row pruned, or target tile absent) — or in the
+background via :meth:`maybe_repack_async` once free slots fall under a
+low-water mark: the new packing is built from a snapshot on a worker
+thread while the old overlay keeps serving, deltas landing meanwhile
+are journaled, and the swap replays the journal onto the new packing.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import replace
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import SellCS
+from repro.dispatch.stats import MatrixStats
+from repro.sparse.matrix import SparseMatrix
+
+Delta = Tuple[str, int, int, float]  # ("insert"|"delete", row, col, value)
+
+
+class _CsrOverlay:
+    """Element-triplet storage with a global free-slot pool.
+
+    The triplet layout is row-agnostic (any slot can hold any row's
+    entry — ``segment_sum`` routes by the stored row id), so slack is
+    pooled globally instead of per row: one pool serves whichever rows
+    actually churn.
+    """
+
+    form = "csr"
+
+    def __init__(self, dense: np.ndarray, slack: float):
+        r, c = np.nonzero(dense)
+        nnz = len(r)
+        cap = nnz + max(int(np.ceil(nnz * slack)), 16)
+        self.rows_h = np.zeros(cap, np.int32)
+        self.cols_h = np.zeros(cap, np.int32)
+        self.vals_h = np.zeros(cap, dense.dtype)
+        self.rows_h[:nnz] = r
+        self.cols_h[:nnz] = c
+        self.vals_h[:nnz] = dense[r, c]
+        self.free: List[int] = list(range(cap - 1, nnz - 1, -1))
+        self.edge_map: Dict[Tuple[int, int], int] = {
+            (int(r[i]), int(c[i])): i for i in range(nnz)}
+        self.shape = dense.shape
+
+    @property
+    def capacity(self) -> int:
+        return len(self.vals_h)
+
+    def free_slots(self) -> int:
+        return len(self.free)
+
+    def insert(self, r: int, c: int, v: float) -> bool:
+        slot = self.edge_map.get((r, c))
+        if slot is not None:
+            self.vals_h[slot] = v
+            return True
+        if not self.free:
+            return False
+        slot = self.free.pop()
+        self.rows_h[slot] = r
+        self.cols_h[slot] = c
+        self.vals_h[slot] = v
+        self.edge_map[(r, c)] = slot
+        return True
+
+    def delete(self, r: int, c: int) -> None:
+        slot = self.edge_map.pop((r, c))
+        # tombstone: value 0 contributes nothing to SpMM/SDDMM/densify;
+        # park the coordinate at (0, 0) so the pattern stays tidy
+        self.vals_h[slot] = 0
+        self.rows_h[slot] = 0
+        self.cols_h[slot] = 0
+        self.free.append(slot)
+
+    def container(self):
+        return (jnp.asarray(self.rows_h), jnp.asarray(self.cols_h),
+                jnp.asarray(self.vals_h))
+
+    def live_coords(self):
+        live = self.vals_h != 0
+        return self.rows_h[live], self.cols_h[live]
+
+    def densify(self) -> np.ndarray:
+        out = np.zeros(self.shape, self.vals_h.dtype)
+        np.add.at(out, (self.rows_h, self.cols_h), self.vals_h)
+        return out
+
+
+class _SellOverlay:
+    """SELL-C-σ storage patched through both synchronized views.
+
+    Slack is **per row**: ``width_slack`` extra slots per row of every
+    kept slice (reserved by ``SellCS.from_dense``).  Inserts must land
+    in an existing row span *and* an existing tile — a row in a pruned
+    (all-zero-width) slice, an exhausted row span, or a cell in a tile
+    the packing never materialized all force a repack, because creating
+    them would change array extents (and therefore the jit key).
+    """
+
+    form = "sell"
+
+    def __init__(self, dense: np.ndarray, width_slack: int, *,
+                 c: int, sigma: int, block: Tuple[int, int]):
+        self.sell0 = SellCS.from_dense(dense, c=c, sigma=sigma,
+                                       block=block,
+                                       width_slack=width_slack)
+        s = self.sell0
+        self.shape = dense.shape
+        self.bm, self.bn = s.bm, s.bn
+        self.n_slots = s.n_slots
+        self.n_tiles = s.n_tiles
+        self.slot_cols_h = np.asarray(s.slot_cols).copy()
+        self.slot_vals_h = np.asarray(s.slot_vals).copy()
+        self.tile_slot_map_h = np.asarray(s.tile_slot_map).copy()
+        self.slot_tile_pos_h = np.asarray(s.slot_tile_pos).copy()
+
+        # packed-row spans from the bucket descriptors
+        self.slot_start: Dict[int, int] = {}
+        self.row_width: Dict[int, int] = {}
+        off = 0
+        for row_off, n_rows, w in s.buckets:
+            for i in range(n_rows):
+                self.slot_start[row_off + i] = off + i * w
+                self.row_width[row_off + i] = w
+            off += n_rows * w
+        slot_packed = np.zeros(self.n_slots, np.int64)
+        for p, lo in self.slot_start.items():
+            slot_packed[lo:lo + self.row_width[p]] = p
+        self.slot_packed = slot_packed
+
+        og = np.asarray(s.out_gather)
+        self.out_gather_h = og
+        n_packed = s.n_packed_rows
+        self.packed_to_orig = {int(og[r]): r for r in range(self.shape[0])
+                               if og[r] < n_packed}
+
+        # tile index: (compact block-row, block-col) -> tile id, plus
+        # compact id per *packed* block-row (recovered from live cells)
+        tr = np.asarray(s.tile_rows)
+        tc = np.asarray(s.tile_cols)
+        self.tiles_index = {(int(tr[t]), int(tc[t])): t
+                            for t in range(self.n_tiles)}
+        self.compact_of_pbr: Dict[int, int] = {}
+        for t in range(self.n_tiles):
+            cells = self.tile_slot_map_h[t]
+            live = cells[cells < self.n_slots]
+            if len(live):
+                pbr = int(self.slot_packed[live[0]]) // self.bm
+                self.compact_of_pbr[pbr] = int(tr[t])
+
+        # per-packed-row free slots and the live edge map
+        self.row_free: Dict[int, List[int]] = {
+            p: [] for p in self.slot_start}
+        self.edge_map: Dict[Tuple[int, int], int] = {}
+        for p, lo in self.slot_start.items():
+            r = self.packed_to_orig.get(p)
+            for slot in range(lo, lo + self.row_width[p]):
+                if r is None or self.slot_vals_h[slot] == 0:
+                    if r is not None:
+                        self.row_free[p].append(slot)
+                else:
+                    self.edge_map[(r, int(self.slot_cols_h[slot]))] = slot
+
+    @property
+    def capacity(self) -> int:
+        return self.n_slots
+
+    def free_slots(self) -> int:
+        return sum(len(v) for v in self.row_free.values())
+
+    def insert(self, r: int, c: int, v: float) -> bool:
+        slot = self.edge_map.get((r, c))
+        if slot is not None:
+            self.slot_vals_h[slot] = v
+            return True
+        p = int(self.out_gather_h[r])
+        if p not in self.slot_start:      # row lives in a pruned slice
+            return False
+        free = self.row_free[p]
+        if not free:                      # row span exhausted
+            return False
+        t = self.tiles_index.get(
+            (self.compact_of_pbr.get(p // self.bm, -1), c // self.bn))
+        if t is None:                     # tile never materialized
+            return False
+        slot = free.pop()
+        i, j = p % self.bm, c % self.bn
+        self.slot_cols_h[slot] = c
+        self.slot_vals_h[slot] = v
+        self.tile_slot_map_h[t, i, j] = slot
+        self.slot_tile_pos_h[slot] = (t * self.bm + i) * self.bn + j
+        self.edge_map[(r, c)] = slot
+        return True
+
+    def delete(self, r: int, c: int) -> None:
+        slot = self.edge_map.pop((r, c))
+        self.slot_vals_h[slot] = 0
+        pos = int(self.slot_tile_pos_h[slot])
+        dead_cell = self.n_tiles * self.bm * self.bn
+        if pos < dead_cell:
+            t, ij = divmod(pos, self.bm * self.bn)
+            self.tile_slot_map_h[t, ij // self.bn, ij % self.bn] \
+                = self.n_slots
+            self.slot_tile_pos_h[slot] = dead_cell
+        self.row_free[int(self.slot_packed[slot])].append(slot)
+
+    def container(self) -> SellCS:
+        # static aux (shape/c/sigma/buckets/block/live rows) is reused
+        # verbatim — only data leaves change, so the jit key cannot move
+        return replace(
+            self.sell0,
+            slot_cols=jnp.asarray(self.slot_cols_h),
+            slot_vals=jnp.asarray(self.slot_vals_h),
+            tile_slot_map=jnp.asarray(self.tile_slot_map_h),
+            slot_tile_pos=jnp.asarray(self.slot_tile_pos_h))
+
+    def live_coords(self):
+        live = np.nonzero(self.slot_vals_h)[0]
+        rows = np.fromiter(
+            (self.packed_to_orig[int(self.slot_packed[s])] for s in live),
+            np.int64, count=len(live))
+        return rows, self.slot_cols_h[live].astype(np.int64)
+
+    def densify(self) -> np.ndarray:
+        return self.container().to_dense()
+
+
+class DeltaGraph:
+    """Mutable sparse graph serving a retrace-stable ``SparseMatrix``.
+
+    ``form`` picks the overlay layout: ``"csr"`` (element triplets,
+    global slack pool — absorbs any churn pattern) or ``"sell"``
+    (SELL-C-σ with per-row ``width_slack`` — keeps the tile-pruned
+    kernel route live; inserts outside the packed structure repack).
+    """
+
+    def __init__(self, matrix, *, form: str = "csr",
+                 slack: float = 0.25, width_slack: int = 2,
+                 c: int = 16, sigma: int = 0,
+                 block: Tuple[int, int] = (8, 8)):
+        if form not in ("csr", "sell"):
+            raise ValueError(
+                f"DeltaGraph form must be 'csr' or 'sell', got {form!r}")
+        self.form = form
+        self.slack = float(slack)
+        self.width_slack = int(width_slack)
+        self._sell_cfg = dict(c=c, sigma=sigma, block=block)
+        self.repacks = 0
+        self.deltas_applied = 0
+        self.stats_invalidations = 0
+        self._lock = threading.RLock()
+        self._bg: Optional[threading.Thread] = None
+        self._journal: Optional[List[Delta]] = None
+        self._pending_swap = None
+        dense = self._to_dense(matrix)
+        self._pack(dense)
+
+    @staticmethod
+    def _to_dense(matrix) -> np.ndarray:
+        if isinstance(matrix, SparseMatrix):
+            return np.asarray(matrix.densify())
+        return np.asarray(matrix)
+
+    # -- packing ------------------------------------------------------------
+
+    def _make_overlay(self, dense: np.ndarray):
+        if self.form == "csr":
+            return _CsrOverlay(dense, self.slack)
+        return _SellOverlay(dense, self.width_slack, **self._sell_cfg)
+
+    def _pack(self, dense: np.ndarray) -> None:
+        """(Re)build the overlay and stamp fresh capacity stats."""
+        self._overlay = self._make_overlay(dense)
+        r, c = np.nonzero(dense)
+        measured = MatrixStats.from_coords(dense.shape, r, c)
+        # constant between repacks: consumers key their jit cache on it
+        self._cap_stats = measured.with_capacity(self._overlay.capacity)
+        self._exact: Optional[MatrixStats] = measured
+        self._matrix: Optional[SparseMatrix] = None
+
+    def repack(self) -> None:
+        """Rebuild the packing around the live edges (fresh slack, fresh
+        measured stats, fresh plan memo — consumers retrace once)."""
+        with self._lock:
+            self._pack(self._overlay.densify())
+            self.repacks += 1
+
+    # -- delta application --------------------------------------------------
+
+    def insert(self, r: int, c: int, v: float) -> None:
+        """Insert (or update) edge (r, c) with value ``v``."""
+        if v == 0:
+            raise ValueError(
+                "insert with value 0 is a delete (0 marks tombstones)")
+        with self._lock:
+            if not self._overlay.insert(int(r), int(c), float(v)):
+                # repack *around* the new edge: a plain repack may not
+                # materialize the row/tile this insert needs (sell packs
+                # only non-empty structure), so bake it into the snapshot
+                dense = self._overlay.densify()
+                dense[int(r), int(c)] = v
+                self._pack(dense)
+                self.repacks += 1
+            self._note_delta(("insert", int(r), int(c), float(v)))
+
+    def delete(self, r: int, c: int) -> None:
+        """Delete edge (r, c) (KeyError when absent)."""
+        with self._lock:
+            self._overlay.delete(int(r), int(c))
+            self._note_delta(("delete", int(r), int(c), 0.0))
+
+    def apply(self, deltas: Iterable[Delta]) -> None:
+        """Apply a batch of ("insert"|"delete", r, c, v) deltas."""
+        for op, r, c, v in deltas:
+            if op == "insert":
+                self.insert(r, c, v)
+            elif op == "delete":
+                self.delete(r, c)
+            else:
+                raise ValueError(f"unknown delta op {op!r}")
+
+    def _note_delta(self, d: Delta) -> None:
+        self.deltas_applied += 1
+        self._matrix = None
+        if self._exact is not None:
+            self._exact = None               # lazily recomputed
+            self.stats_invalidations += 1
+        if self._journal is not None:
+            self._journal.append(d)
+
+    # -- served views -------------------------------------------------------
+
+    @property
+    def matrix(self) -> SparseMatrix:
+        """The served matrix.  Carries **capacity stats** — identical
+        between repacks, so jitted consumers never retrace on deltas."""
+        with self._lock:
+            if self._matrix is None:
+                self._matrix = SparseMatrix(
+                    {self.form: self._overlay.container()},
+                    self._overlay.shape, self._cap_stats)
+            return self._matrix
+
+    @property
+    def exact_stats(self) -> MatrixStats:
+        """Live-edge stats (recomputed on demand after deltas).  The
+        planner prices :attr:`matrix` from capacity stats; this is the
+        true structure — compare the two to decide when a repack (and
+        its one-retrace re-pricing) is worth taking early."""
+        with self._lock:
+            if self._exact is None:
+                r, c = self._overlay.live_coords()
+                self._exact = MatrixStats.from_coords(
+                    self._overlay.shape, r, c)
+            return self._exact
+
+    @property
+    def live_nnz(self) -> int:
+        with self._lock:
+            return len(self._overlay.edge_map)
+
+    @property
+    def capacity(self) -> int:
+        return self._overlay.capacity
+
+    def free_slots(self) -> int:
+        with self._lock:
+            return self._overlay.free_slots()
+
+    # -- background repack --------------------------------------------------
+
+    def maybe_repack_async(self, low_water: float = 0.1) -> bool:
+        """Kick off a background repack when free slots fall under
+        ``low_water`` (fraction of capacity).  The rebuild runs from a
+        snapshot while this overlay keeps serving; call
+        :meth:`poll_repack` (or any delta/next call to this) to swap
+        the finished packing in.  Returns True when a rebuild started.
+        """
+        self.poll_repack()
+        with self._lock:
+            if self._bg is not None:
+                return False
+            if self.free_slots() > low_water * max(self.capacity, 1):
+                return False
+            snapshot = self._overlay.densify()
+            self._journal = []
+
+            def build():
+                self._pending_swap = self._make_overlay(snapshot)
+
+            self._bg = threading.Thread(target=build, daemon=True)
+            self._bg.start()
+            return True
+
+    def poll_repack(self, timeout: Optional[float] = None) -> bool:
+        """Swap in a finished background repack (True when swapped)."""
+        with self._lock:
+            if self._bg is None:
+                return False
+            self._bg.join(timeout=0.0 if timeout is None else timeout)
+            if self._bg.is_alive():
+                return False
+            self._bg = None
+            new = self._pending_swap
+            journal, self._journal = self._journal, None
+            self._pending_swap = None
+            if new is None:
+                return False
+            old = self._overlay
+            self._overlay = new
+            dense = None
+            for op, r, c, v in journal:
+                ok = (self._overlay.insert(r, c, v) if op == "insert"
+                      else (self._overlay.delete(r, c), True)[1])
+                if not ok:
+                    # replay overflowed the fresh slack: fall back to a
+                    # synchronous rebuild from the journaled state
+                    dense = old.densify()
+                    break
+            if dense is not None:
+                self._overlay = old
+                self._pack(dense)
+            else:
+                r2, c2 = self._overlay.live_coords()
+                measured = MatrixStats.from_coords(
+                    self._overlay.shape, r2, c2)
+                self._cap_stats = measured.with_capacity(
+                    self._overlay.capacity)
+                self._exact = measured
+                self._matrix = None
+            self.repacks += 1
+            return True
+
+    # -- reporting ----------------------------------------------------------
+
+    def report(self) -> Dict[str, Any]:
+        with self._lock:
+            return {
+                "form": self.form,
+                "live_nnz": self.live_nnz,
+                "capacity": self.capacity,
+                "free_slots": self.free_slots(),
+                "deltas_applied": self.deltas_applied,
+                "repacks": self.repacks,
+                "stats_invalidations": self.stats_invalidations,
+                "background_repack_running": self._bg is not None,
+            }

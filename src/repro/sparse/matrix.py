@@ -348,6 +348,23 @@ class SparseMatrix:
         return SparseMatrix({name: form}, self.shape, self.stats,
                             cache=self._cache)
 
+    def with_stats(self, stats: MatrixStats) -> "SparseMatrix":
+        """Same forms and data, re-stated planner stats, fresh plan memo.
+
+        Serving overlays (``repro.serve.runtime.DeltaGraph``) use this
+        at repack/re-pricing boundaries: the stats are pytree aux, so a
+        re-stat deliberately changes the jit cache key — the planner
+        re-prices the matrix and consumers retrace once.  The plan memo
+        is NOT shared (unlike :meth:`with_data`): memoized plans were
+        priced off the old stats.
+        """
+        if stats is not None and (stats.shape[0] < self.shape[0]
+                                  or stats.shape[1] < self.shape[1]):
+            raise ValueError(
+                f"stats shape {stats.shape} does not cover matrix shape "
+                f"{self.shape} (stats carry the padded extent)")
+        return SparseMatrix(self._forms, self.shape, stats)
+
     def pattern(self) -> "SparseMatrix":
         """0/1 mask of the primary form's nonzero entries (the sampling
         operand SDDMM and the backward pass work on)."""
