@@ -87,15 +87,15 @@ def run(quick: bool = True, policy: str = "auto",
     for mb in BATCH_SIZES:
         rep = _drive(params, requests, mb, policy)
         results[f"batch{mb}"] = rep
-        padding = rep["executor"]["padding"]
+        waste = rep["executor"]["waste"]
         emit(f"serve_gcn_b{mb}",
              1e6 / max(rep["req_per_s_wall"], 1e-9),
              f"req_per_s={rep['req_per_s_wall']:.1f};"
-             f"p50_ms={rep['latency_ms_p50']:.1f};"
-             f"p99_ms={rep['latency_ms_p99']:.1f};"
+             f"p50_ms={rep['p50_ms']:.1f};"
+             f"p99_ms={rep['p99_ms']:.1f};"
              f"retraces={rep['steady_compiles']};"
              f"compiles={rep['warm_compiles']};"
-             f"padding_waste={padding['waste_fraction']:.3f}")
+             f"padding_waste={waste['waste_fraction']:.3f}")
     speedup = (results["batch32"]["req_per_s_wall"]
                / max(results["batch1"]["req_per_s_wall"], 1e-9))
     emit("serve_gcn_batched_vs_unbatched",

@@ -73,18 +73,18 @@ def _make_drifting_workload(quick: bool):
 
 
 def _summarize(rep: Dict, elapsed: float, n: int) -> Dict:
-    padding = rep["executor"]["padding"]
+    waste = rep["executor"]["waste"]
     out = {
         "req_per_s_wall": n / elapsed,
-        "latency_ms_p50": rep["latency_ms_p50"],
-        "latency_ms_p99": rep["latency_ms_p99"],
-        "waste_fraction": padding["waste_fraction"],
-        "nnz_blowup": padding["nnz_blowup"],
+        "p50_ms": rep["p50_ms"],
+        "p99_ms": rep["p99_ms"],
+        "waste_fraction": waste["waste_fraction"],
+        "nnz_blowup": waste["nnz_blowup"],
         "compiles": rep["executor"]["compiles"],
         "buckets": rep["executor"]["buckets"],
         "per_bucket_waste": {
             k: v["waste_fraction"]
-            for k, v in padding.get("per_bucket", {}).items()},
+            for k, v in waste.get("per_bucket", {}).items()},
     }
     if "ladder" in rep["executor"]:
         lad = rep["executor"]["ladder"]
@@ -172,8 +172,8 @@ def run(quick: bool = True, policy: str = "auto",
         emit(f"serve_adaptive_{name}",
              1e6 / max(rep["req_per_s_wall"], 1e-9),
              f"req_per_s={rep['req_per_s_wall']:.1f};"
-             f"p50_ms={rep['latency_ms_p50']:.1f};"
-             f"p99_ms={rep['latency_ms_p99']:.1f};"
+             f"p50_ms={rep['p50_ms']:.1f};"
+             f"p99_ms={rep['p99_ms']:.1f};"
              f"waste={rep['waste_fraction']:.3f};"
              f"retraces={rep['steady_compiles']}")
     fixed = results["micro_fixed"]["waste_fraction"]

@@ -1,0 +1,149 @@
+"""Bench regression gate: current bench JSON vs the committed baselines.
+
+CI's bench-smoke job re-runs the quick benches on every push; this
+module compares the fresh numbers against the **committed** baselines
+(``BENCH_kernels.json``, ``BENCH_serve_adaptive.json``) and fails the
+job only on regressions that can't be CPU-runner noise:
+
+* a kernel row slower than ``tolerance``× its baseline (default 2× —
+  shared-runner variance on micro-kernels routinely hits 1.5×), or a
+  serve driver's wall-clock throughput under 1/tolerance of baseline;
+* **any** increase in a serve driver's ``steady_compiles`` — a retrace
+  in the steady state is a correctness bug in the bucketing/ladder
+  carryover, never noise.
+
+Rows present on only one side are reported as informational skips, not
+failures: benches gain and lose rows as the suite evolves, and a rename
+must not wedge CI.  Keys are read tolerantly (``p50_ms`` or the older
+``latency_ms_p50``) so the gate can compare across the rename boundary.
+
+``python -m benchmarks.regression_check --kernels-baseline ... --kernels-current
+... --serve-baseline ... --serve-current ...`` exits 1 on any failure.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Optional, Tuple
+
+DEFAULT_TOLERANCE = 2.0
+
+# serve report keys whose spelling changed across PRs: try left to right
+_KEY_ALIASES = {
+    "p50_ms": ("p50_ms", "latency_ms_p50"),
+    "p99_ms": ("p99_ms", "latency_ms_p99"),
+}
+
+
+def get_key(d: Dict, key: str):
+    """Read ``key`` from a report dict, tolerating older spellings."""
+    for k in _KEY_ALIASES.get(key, (key,)):
+        if k in d:
+            return d[k]
+    return None
+
+
+def _rows_by_name(doc: Dict) -> Dict[str, float]:
+    return {r["name"]: float(r["us_per_call"]) for r in doc.get("rows", [])}
+
+
+def check_kernels(current: Dict, baseline: Dict, *,
+                  tolerance: float = DEFAULT_TOLERANCE
+                  ) -> Tuple[List[str], List[str]]:
+    """(failures, notes) comparing kernel rows by name on us_per_call."""
+    cur = _rows_by_name(current)
+    base = _rows_by_name(baseline)
+    failures, notes = [], []
+    for name in sorted(base):
+        if name not in cur:
+            notes.append(f"kernel row {name!r} missing from current run "
+                         "(renamed or removed); skipped")
+            continue
+        b, c = base[name], cur[name]
+        if b > 0 and c > tolerance * b:
+            failures.append(
+                f"kernel {name}: {c:.1f} us/call vs baseline {b:.1f} "
+                f"({c / b:.2f}x > {tolerance:.1f}x tolerance)")
+    for name in sorted(set(cur) - set(base)):
+        notes.append(f"kernel row {name!r} new (no baseline); skipped")
+    return failures, notes
+
+
+def check_serve(current: Dict, baseline: Dict, *,
+                tolerance: float = DEFAULT_TOLERANCE
+                ) -> Tuple[List[str], List[str]]:
+    """(failures, notes) for the adaptive-serving drivers.
+
+    Throughput may drop to 1/tolerance of baseline; ``steady_compiles``
+    (retraces after the warm pass) must never increase.
+    """
+    failures, notes = [], []
+    drivers = [k for k, v in baseline.items() if isinstance(v, dict)
+               and "steady_compiles" in v]
+    for name in sorted(drivers):
+        if name not in current or not isinstance(current[name], dict):
+            notes.append(f"serve driver {name!r} missing from current run; "
+                         "skipped")
+            continue
+        b, c = baseline[name], current[name]
+        bt, ct = b.get("req_per_s_wall"), c.get("req_per_s_wall")
+        if bt and ct and ct < bt / tolerance:
+            failures.append(
+                f"serve {name}: {ct:.1f} req/s vs baseline {bt:.1f} "
+                f"({bt / ct:.2f}x slower > {tolerance:.1f}x tolerance)")
+        br, cr = b.get("steady_compiles"), c.get("steady_compiles")
+        if br is not None and cr is not None and cr > br:
+            failures.append(
+                f"serve {name}: steady_compiles rose {br} -> {cr} "
+                "(steady-state retrace; not noise)")
+    return failures, notes
+
+
+def _load(path: Optional[str]) -> Optional[Dict]:
+    if not path:
+        return None
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except FileNotFoundError:
+        return None
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--kernels-baseline", default=None, metavar="PATH")
+    ap.add_argument("--kernels-current", default=None, metavar="PATH")
+    ap.add_argument("--serve-baseline", default=None, metavar="PATH")
+    ap.add_argument("--serve-current", default=None, metavar="PATH")
+    ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
+    args = ap.parse_args(argv)
+
+    failures: List[str] = []
+    notes: List[str] = []
+    for label, base_path, cur_path, check in (
+            ("kernels", args.kernels_baseline, args.kernels_current,
+             check_kernels),
+            ("serve", args.serve_baseline, args.serve_current,
+             check_serve)):
+        base, cur = _load(base_path), _load(cur_path)
+        if base is None or cur is None:
+            notes.append(f"{label}: baseline or current JSON missing "
+                         f"({base_path!r} / {cur_path!r}); skipped")
+            continue
+        f, n = check(cur, base, tolerance=args.tolerance)
+        failures += f
+        notes += n
+
+    for n in notes:
+        print(f"note: {n}")
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("regression check passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

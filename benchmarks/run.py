@@ -54,6 +54,10 @@ def main() -> None:
                     help="measure the cost-model constants on this "
                          "backend first and use them for the kernel "
                          "benches (persisted via AutotuneCache)")
+    ap.add_argument("--obs-snapshot", default=None, metavar="PATH",
+                    help="write repro.obs.snapshot() (metrics, span "
+                         "summary, retrace sentry, cost audit) as JSON "
+                         "after the benches finish")
     args = ap.parse_args()
     quick = not args.full
 
@@ -121,6 +125,14 @@ def main() -> None:
             fn(quick=quick, policy=args.policy)
         else:
             fn(quick=quick)
+    if args.obs_snapshot:
+        from repro import obs
+
+        with open(args.obs_snapshot, "w") as f:
+            json.dump(obs.snapshot(), f, indent=2)
+            f.write("\n")
+        print(f"# wrote obs snapshot to {args.obs_snapshot}",
+              file=sys.stderr)
     pc = plan_cache_stats()
     emitted = pc["hits"] + pc["misses"]
     rate = pc["hits"] / emitted if emitted else 0.0

@@ -1,0 +1,92 @@
+"""Observability quickstart: one serving run, one snapshot.
+
+Drives a small adaptive serving workload through
+``BatchServingEngine`` and shows everything ``repro.obs`` collected
+along the way — dispatcher plan counts, per-lane compiles vs calls
+(the retrace sentry), padding waste, serve latency percentiles, span
+timings for each stage of the serve path, and the cost-model audit's
+predicted-vs-measured rows.
+
+Run from the repo root::
+
+    PYTHONPATH=src python examples/observability.py
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import obs
+from repro.serve.engine import BatchServeConfig, BatchServingEngine
+from repro.sparse import SparseMatrix
+
+BLOCK = (16, 16)
+D = 16
+
+
+def main() -> None:
+    obs.reset()                       # scope the instruments to this run
+    rng = np.random.default_rng(0)
+
+    with BatchServingEngine(
+            scfg=BatchServeConfig(max_batch=8, adaptive=True)) as eng, \
+            obs.span("example.serve_mixed_traffic"):
+        futs = []
+        for _ in range(24):
+            n = int(rng.choice((48, 48, 64, 96)))   # shape-skewed traffic
+            dense = np.where(rng.random((n, n)) < 0.08,
+                             rng.normal(size=(n, n)), 0.0).astype(np.float32)
+            dense[0, 0] = dense[0, 0] or 1.0
+            mat = SparseMatrix.from_dense(dense, formats=("ell", "csr"),
+                                          block=BLOCK)
+            h = jnp.asarray(
+                rng.normal(size=(n, D)).astype(np.float32))
+            futs.append(eng.submit(mat, h))
+        eng.drain()
+        for f in futs:
+            f.result(timeout=60)
+        rep = eng.report()
+
+    # -- the engine's own view (canonical keys) -----------------------------
+    print(f"served {rep['completed']} requests | "
+          f"p50 {rep['p50_ms']:.1f} ms, p99 {rep['p99_ms']:.1f} ms | "
+          f"compiles {rep['executor']['compiles']} | "
+          f"waste {rep['executor']['waste']['waste_fraction']:.0%}")
+
+    # -- one coherent snapshot of everything --------------------------------
+    snap = obs.snapshot()
+    c = snap["metrics"]["counters"]
+    print("\nplans by (op, path, policy):")
+    for labels, count in sorted(c["dispatch_plans_total"].items()):
+        print(f"  {labels}: {count}")
+    print("\ncompiles vs calls per executor lane:")
+    for lane, compiles in sorted(c["executor_compiles_total"].items()):
+        calls = c["executor_calls_total"].get(lane, 0)
+        print(f"  {lane}: {compiles} compile(s), {calls} call(s)")
+    print(f"\nunexpected retraces: "
+          f"{snap['sentry']['unexpected_retraces']}")
+
+    print("\nserve-path span timings:")
+    for name, s in sorted(snap["spans"].items()):
+        print(f"  {name}: n={s['count']} p50={s['p50_ms']:.2f}ms "
+              f"max={s['max_ms']:.2f}ms")
+
+    print("\ncost audit (predicted vs measured, per op/path/bucket):")
+    for cell, agg in snap["audit"]["summary"].items():
+        print(f"  {cell}: n={agg['n']} "
+              f"measured_mean={agg['measured_ms_mean']}ms "
+              f"predicted_mean={agg['predicted_mean']}")
+    if snap["audit"]["mispredictions"]:
+        print("  model mispredicted:",
+              json.dumps(snap["audit"]["mispredictions"], indent=2))
+
+    # -- exporters -----------------------------------------------------------
+    prom = obs.to_prometheus()
+    print(f"\nprometheus exposition: {len(prom.splitlines())} lines, e.g.")
+    for line in prom.splitlines()[:6]:
+        print(f"  {line}")
+    print(f"jsonl export: {len(obs.to_jsonl().splitlines())} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -119,10 +119,10 @@ def main():
         rep = eng.report()
     print(f"served {rep['completed']} mixed-shape requests: "
           f"{rep['req_per_s']:.0f} req/s, "
-          f"p50 {rep['latency_ms_p50']:.1f} ms, "
+          f"p50 {rep['p50_ms']:.1f} ms, "
           f"compiles {rep['executor']['compiles']} "
           f"(buckets {rep['executor']['buckets']}), "
-          f"padding waste {rep['executor']['padding']['waste_fraction']:.0%}")
+          f"padding waste {rep['executor']['waste']['waste_fraction']:.0%}")
 
 
 if __name__ == "__main__":

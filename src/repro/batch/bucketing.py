@@ -26,6 +26,7 @@ from typing import Dict, Optional, Union
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.batch.block_diag import pad_ell_width
 from repro.core.formats import BlockELL, _cdiv
 from repro.dispatch.stats import MatrixStats
@@ -248,13 +249,24 @@ class PaddingWaste:
         self.padded_rows += int(padded_rows)
         self.real_nnz += int(real_nnz)
         self.padded_nnz += int(padded_nnz)
+        # process-wide waste counters: every ledger instance also streams
+        # into the obs registry, so one snapshot shows aggregate padding
+        # without walking engines (per-bucket detail stays on the ledger)
+        obs.counter("padding_rows_real_total").inc(int(real_rows))
+        obs.counter("padding_rows_padded_total").inc(int(padded_rows))
+        obs.counter("padding_nnz_real_total").inc(int(real_nnz))
+        obs.counter("padding_nnz_padded_total").inc(int(padded_nnz))
         if bucket is not None:
             key = bucket if isinstance(bucket, str) else bucket.label
             sub = self.per_bucket.get(key)
             if sub is None:
                 sub = self.per_bucket[key] = PaddingWaste()
-            sub.add(real_rows=real_rows, padded_rows=padded_rows,
-                    real_nnz=real_nnz, padded_nnz=padded_nnz)
+            # direct field bumps: the sub-ledger must not re-stream the
+            # volume into the process-wide obs counters
+            sub.real_rows += int(real_rows)
+            sub.padded_rows += int(padded_rows)
+            sub.real_nnz += int(real_nnz)
+            sub.padded_nnz += int(padded_nnz)
 
     @property
     def row_blowup(self) -> float:

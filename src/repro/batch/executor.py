@@ -18,12 +18,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
+import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
 from repro.dispatch.dispatcher import plan_spmm
 from repro.dispatch.policy import PATH_CSR, PATH_ELL
@@ -56,6 +59,15 @@ class ExecutorKey:
     batch: int
     d: int
     form: str
+
+    @property
+    def label(self) -> str:
+        """Stable per-cell name; ``BucketedExecutor.lane_label`` prefixes
+        it with the owning executor's id to form the sentry lane."""
+        return f"{self.bucket.label}/b{self.batch}/d{self.d}/{self.form}"
+
+
+_EXECUTOR_IDS = itertools.count()
 
 
 class BucketedExecutor:
@@ -102,11 +114,19 @@ class BucketedExecutor:
         self.jit = jit
         self._executors: "collections.OrderedDict[ExecutorKey, Callable]" \
             = collections.OrderedDict()
+        # sentry lanes are namespaced per executor instance: each
+        # instance holds its own jit cache, so two engines compiling the
+        # same (bucket, batch, d, form) cell are two first compiles, not
+        # a retrace
+        self.uid = next(_EXECUTOR_IDS)
         self.compiles = 0       # executor traces (LRU misses + retraces)
         self.calls = 0          # batched dispatches
         self.requests = 0       # individual graphs served
         self.evictions = 0
         self.waste = PaddingWaste()
+        # bucket plans made by choose_form, kept for the cost audit (the
+        # serving-side predicted-vs-measured rows need the cost vector)
+        self._bucket_plans: Dict[Tuple[Bucket, int], Any] = {}
 
     # -- planning -----------------------------------------------------------
 
@@ -141,8 +161,19 @@ class BucketedExecutor:
                     f"group carries no bucketable form: {tuple(carried)}")
             plan = plan_spmm(canonical_stats(bucket), d, policy=self.policy,
                              cost_model=self.cost_model, candidates=cand)
+            self._bucket_plans[(bucket, d)] = plan
             form = plan.path
         return form, form
+
+    def bucket_plan(self, bucket: Bucket, d: int):
+        """The cost-model plan made for this (bucket, d) cell, when one
+        was (forced forms/policies plan nothing)."""
+        return self._bucket_plans.get((bucket, d))
+
+    def lane_label(self, key: ExecutorKey) -> str:
+        """The retrace-sentry lane for this cell in this executor's
+        compile cache (see ``uid``)."""
+        return f"x{self.uid}/{key.label}"
 
     def executor_for(self, key: ExecutorKey) -> Callable:
         """The jitted program serving one (bucket, batch, d, form) cell
@@ -168,19 +199,25 @@ class BucketedExecutor:
 
             return ops.matmul(mat, h, policy=path, candidates=(path,))
 
+        lane = self.lane_label(key)
         if self.jit:
             def run(*args):
                 self.compiles += 1  # runs at trace time only
+                obs.SENTRY.record_compile(lane)
                 return body(*args)
 
             exe = jax.jit(run)
         else:
             self.compiles += 1  # eager mode: one "trace" per key
+            obs.SENTRY.record_compile(lane)
             exe = body
         self._executors[key] = exe
         while len(self._executors) > self.max_executors:
-            self._executors.popitem(last=False)
+            evicted, _ = self._executors.popitem(last=False)
             self.evictions += 1
+            obs.counter("executor_evictions_total").inc()
+            # an evicted lane legitimately recompiles on its next use
+            obs.SENTRY.forget(self.lane_label(evicted))
         return exe
 
     # -- execution ----------------------------------------------------------
@@ -197,17 +234,19 @@ class BucketedExecutor:
             raise ValueError(f"{len(mats)} graphs but {len(hs)} features")
         groups: Dict[Tuple[Bucket, int], List[int]] = {}
         hs = [jnp.asarray(h) for h in hs]
-        for i, (m, h) in enumerate(zip(mats, hs)):
-            if m.stats is None:
-                raise ValueError(
-                    "bucketed execution needs matrices with stats "
-                    "(construct with SparseMatrix.from_dense/from_*)")
-            if h.ndim != 2 or h.shape[0] != m.shape[1]:
-                raise ValueError(
-                    f"request {i}: features {h.shape} do not match matrix "
-                    f"{m.shape}")
-            bucket = self.bucket_of(m.stats)
-            groups.setdefault((bucket, int(h.shape[1])), []).append(i)
+        with obs.span("serve.bucket", requests=len(mats),
+                      grid="ladder" if self.ladder is not None else "fixed"):
+            for i, (m, h) in enumerate(zip(mats, hs)):
+                if m.stats is None:
+                    raise ValueError(
+                        "bucketed execution needs matrices with stats "
+                        "(construct with SparseMatrix.from_dense/from_*)")
+                if h.ndim != 2 or h.shape[0] != m.shape[1]:
+                    raise ValueError(
+                        f"request {i}: features {h.shape} do not match "
+                        f"matrix {m.shape}")
+                bucket = self.bucket_of(m.stats)
+                groups.setdefault((bucket, int(h.shape[1])), []).append(i)
         out: List[Optional[np.ndarray]] = [None] * len(mats)
         for (bucket, d), idxs in groups.items():
             for chunk_start in range(0, len(idxs), self.max_batch):
@@ -222,17 +261,31 @@ class BucketedExecutor:
         form, path = self.choose_form(bucket, d, carried)
         bs = _quantize_batch(len(idxs), self.max_batch)
         dtype = hs[idxs[0]].dtype
-        padded = [pad_to_bucket(mats[i], bucket, form=form) for i in idxs]
-        feats = [paths.pad_rows(hs[i], bucket.cols) for i in idxs]
-        while len(padded) < bs:
-            padded.append(empty_in_bucket(bucket, form=form, dtype=dtype))
-            feats.append(jnp.zeros((bucket.cols, d), dtype))
-        B = BatchedSparseMatrix.from_matrices(padded, formats=(form,))
-        h = jnp.concatenate(feats, axis=0)
         key = ExecutorKey(bucket=bucket, batch=bs, d=d, form=path)
+        lane = self.lane_label(key)
+        with obs.span("serve.compose", lane=lane, n=len(idxs)):
+            padded = [pad_to_bucket(mats[i], bucket, form=form)
+                      for i in idxs]
+            feats = [paths.pad_rows(hs[i], bucket.cols) for i in idxs]
+            while len(padded) < bs:
+                padded.append(empty_in_bucket(bucket, form=form,
+                                              dtype=dtype))
+                feats.append(jnp.zeros((bucket.cols, d), dtype))
+            B = BatchedSparseMatrix.from_matrices(padded, formats=(form,))
+            h = jnp.concatenate(feats, axis=0)
         args = (B.matrix, h) if self.context is None \
             else (self.context, B.matrix, h)
-        y = self._executor_for(key)(*args)
+        with obs.span("serve.execute", lane=lane):
+            t0 = time.perf_counter()
+            y = self._executor_for(key)(*args)
+            jax.block_until_ready(y)
+            exec_ms = (time.perf_counter() - t0) * 1e3
+        obs.SENTRY.record_call(lane)
+        plan = self.bucket_plan(bucket, d)
+        obs.AUDIT.record_raw(
+            op="spmm", path=path, measured_ms=exec_ms, bucket=bucket.label,
+            costs=plan.costs if plan is not None else None,
+            policy=plan.policy if plan is not None else self.policy)
         self.calls += 1
         self.requests += len(idxs)
         real_nnz = sum(mats[i].stats.nnz for i in idxs)
@@ -240,13 +293,16 @@ class BucketedExecutor:
         self.waste.add(real_rows=real_rows, padded_rows=bs * bucket.rows,
                        real_nnz=real_nnz, padded_nnz=bs * bucket.nnz,
                        bucket=bucket)
-        for slot, i in enumerate(idxs):
-            lo = slot * bucket.rows
-            out[i] = np.asarray(y[lo:lo + mats[i].shape[0]])
+        with obs.span("serve.complete", lane=lane, n=len(idxs)):
+            for slot, i in enumerate(idxs):
+                lo = slot * bucket.rows
+                out[i] = np.asarray(y[lo:lo + mats[i].shape[0]])
 
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> Dict[str, Any]:
+        """Canonical keys (see DESIGN.md "Observability"); the old
+        ``padding`` spelling resolves via a deprecation alias."""
         out = {
             "requests": self.requests,
             "calls": self.calls,
@@ -254,8 +310,8 @@ class BucketedExecutor:
             "executors_cached": len(self._executors),
             "evictions": self.evictions,
             "buckets": len({k.bucket for k in self._executors}),
-            "padding": self.waste.as_dict(),
+            "waste": self.waste.as_dict(),
         }
         if self.ladder is not None:
             out["ladder"] = self.ladder.report()
-        return out
+        return obs.renamed_keys(out, {"padding": "waste"})

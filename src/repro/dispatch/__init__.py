@@ -7,8 +7,10 @@ from repro.dispatch.autotune import (AutotuneCache, GLOBAL_CACHE, calibrate,
 from repro.dispatch.cost_model import CostModel, DEFAULT_COST_MODEL
 from repro.dispatch.dispatcher import (Plan, clear_log, dispatch_log,
                                        dispatch_sddmm, dispatch_spmm,
-                                       last_plan, plan_fused_attention,
-                                       plan_sddmm, plan_spmm)
+                                       last_plan, log_capacity,
+                                       plan_fused_attention, plan_sddmm,
+                                       plan_spmm, record_plan,
+                                       set_log_capacity)
 from repro.dispatch.operand import SparseOperand
 from repro.dispatch.policy import (DEFAULT_CONFIG, DispatchConfig, PATHS,
                                    PATH_CSR, PATH_DENSE, PATH_ELL,
@@ -21,7 +23,8 @@ __all__ = [
     "AutotuneCache", "GLOBAL_CACHE", "calibrate", "make_key", "measure",
     "CostModel", "DEFAULT_COST_MODEL",
     "Plan", "clear_log", "dispatch_log", "dispatch_sddmm", "dispatch_spmm",
-    "last_plan", "plan_fused_attention", "plan_sddmm", "plan_spmm",
+    "last_plan", "log_capacity", "plan_fused_attention", "plan_sddmm",
+    "plan_spmm", "record_plan", "set_log_capacity",
     "SparseOperand",
     "DEFAULT_CONFIG", "DispatchConfig", "PATHS", "PATH_CSR", "PATH_DENSE",
     "PATH_ELL", "PATH_FUSED_ATTN", "PATH_SELL", "POLICIES", "POLICY_AUTO",

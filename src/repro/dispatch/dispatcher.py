@@ -25,11 +25,15 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro import obs
 
 from repro.core.formats import BlockCOO, BlockELL
 from repro.dispatch import autotune as autotune_mod
@@ -73,32 +77,77 @@ class Plan:
 
 
 # Bounded record of recent decisions, for benchmarks / engines to report.
-_LOG: "collections.deque[Plan]" = collections.deque(maxlen=256)
+# Serving worker threads append concurrently with benchmark readers, so
+# every access goes through the lock; the ring's capacity is explicit
+# and adjustable (shrinking drops the oldest entries).
+DEFAULT_LOG_CAPACITY = 256
+
+_LOG_LOCK = threading.Lock()
+_LOG: "collections.deque[Plan]" = collections.deque(
+    maxlen=DEFAULT_LOG_CAPACITY)
 
 
 def dispatch_log() -> Tuple[Plan, ...]:
-    return tuple(_LOG)
+    with _LOG_LOCK:
+        return tuple(_LOG)
 
 
 def last_plan(op: Optional[str] = None) -> Optional[Plan]:
-    for plan in reversed(_LOG):
-        if op is None or plan.op == op:
-            return plan
+    with _LOG_LOCK:
+        for plan in reversed(_LOG):
+            if op is None or plan.op == op:
+                return plan
     return None
 
 
 def clear_log() -> None:
-    _LOG.clear()
+    with _LOG_LOCK:
+        _LOG.clear()
+
+
+def log_capacity() -> int:
+    return _LOG.maxlen or 0
+
+
+def set_log_capacity(capacity: int) -> None:
+    """Resize the plan ring (keeps the newest entries that still fit)."""
+    global _LOG
+    capacity = int(capacity)
+    if capacity < 1:
+        raise ValueError(f"log capacity must be >= 1, got {capacity}")
+    with _LOG_LOCK:
+        _LOG = collections.deque(_LOG, maxlen=capacity)
 
 
 def _record(plan: Plan) -> Plan:
-    _LOG.append(plan)
+    with _LOG_LOCK:
+        _LOG.append(plan)
+    obs.counter("dispatch_plans_total", op=plan.op, path=plan.path,
+                policy=plan.policy).inc()
     return plan
 
 
 def record_plan(plan: Plan) -> Plan:
     """Append an externally-made plan to the dispatch log (reporting)."""
     return _record(plan)
+
+
+def _audit_run(plan: Plan, run):
+    """Execute ``run()`` and record predicted-vs-measured in the audit.
+
+    Timing blocks on the result (cheap: callers materialize it anyway);
+    traced outputs (a concrete operand dispatched under jit over the
+    dense side) cannot be timed and are skipped.
+    """
+    t0 = time.perf_counter()
+    out = run()
+    if not _is_traced(*jax.tree_util.tree_leaves(out)):
+        try:
+            jax.block_until_ready(out)
+        except Exception:  # non-array leaves: time without the barrier
+            pass
+        obs.AUDIT.record(plan, (time.perf_counter() - t0) * 1e3)
+    return out
 
 
 def _is_traced(*arrays) -> bool:
@@ -344,8 +393,9 @@ def dispatch_spmm(
         plan = Plan(op="spmm", path=policy, policy=policy, reason="forced",
                     use_kernel=uk, interpret=interpret)
         _record(plan)
-        y = _run_spmm_path(policy, operand, h, use_kernel=uk,
-                           interpret=interpret, bd=bd, out_dtype=out_dtype)
+        y = _audit_run(plan, lambda: _run_spmm_path(
+            policy, operand, h, use_kernel=uk, interpret=interpret,
+            bd=bd, out_dtype=out_dtype))
         return y[:, 0] if h_was_1d else y
 
     stats = operand.stats()
@@ -383,9 +433,9 @@ def dispatch_spmm(
                          interpret=interpret,
                          candidates=(PATH_ELL, PATH_CSR, PATH_DENSE))
     _record(plan)
-    y = _run_spmm_path(plan.path, operand, h, use_kernel=plan.use_kernel,
-                       interpret=plan.interpret, bd=bd,
-                       out_dtype=out_dtype)
+    y = _audit_run(plan, lambda: _run_spmm_path(
+        plan.path, operand, h, use_kernel=plan.use_kernel,
+        interpret=plan.interpret, bd=bd, out_dtype=out_dtype))
     return y[:, 0] if h_was_1d else y
 
 
@@ -510,9 +560,9 @@ def dispatch_sddmm(
         plan = Plan(op="sddmm", path=policy, policy=policy, reason="forced",
                     use_kernel=uk, interpret=interpret)
         _record(plan)
-        return _run_sddmm_path(policy, a, b, c, use_kernel=uk,
-                               interpret=interpret, bk=bk,
-                               out_dtype=out_dtype)
+        return _audit_run(plan, lambda: _run_sddmm_path(
+            policy, a, b, c, use_kernel=uk, interpret=interpret, bk=bk,
+            out_dtype=out_dtype))
 
     stats = MatrixStats.from_blockcoo(a)
 
@@ -544,6 +594,6 @@ def dispatch_sddmm(
                           interpret=interpret,
                           candidates=(PATH_ELL, PATH_CSR, PATH_DENSE))
     _record(plan)
-    return _run_sddmm_path(plan.path, a, b, c, use_kernel=plan.use_kernel,
-                           interpret=plan.interpret, bk=bk,
-                           out_dtype=out_dtype)
+    return _audit_run(plan, lambda: _run_sddmm_path(
+        plan.path, a, b, c, use_kernel=plan.use_kernel,
+        interpret=plan.interpret, bk=bk, out_dtype=out_dtype))

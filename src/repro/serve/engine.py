@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models.transformer import decode_step, init_cache, prefill
 
@@ -329,12 +330,13 @@ class BatchServingEngine:
         if self._stop.is_set():
             raise RuntimeError("engine is closed")
         adj = getattr(matrix, "adj", matrix)
-        req = _Request(matrix=adj, features=features, future=Future(),
-                       t_submit=time.perf_counter())
-        if self._t_first is None:
-            self._t_first = req.t_submit
-        self._submitted += 1
-        self._queue.put(req)
+        with obs.span("serve.admit", engine="batch"):
+            req = _Request(matrix=adj, features=features, future=Future(),
+                           t_submit=time.perf_counter())
+            if self._t_first is None:
+                self._t_first = req.t_submit
+            self._submitted += 1
+            self._queue.put(req)
         if self._stop.is_set():
             # close() may have drained between our check and the put;
             # sweep again so no request can strand in a dead queue
@@ -405,8 +407,9 @@ class BatchServingEngine:
 
     def _flush(self, batch: List[_Request]) -> None:
         try:
-            outs = self.executor.run([r.matrix for r in batch],
-                                     [r.features for r in batch])
+            with obs.span("serve.flush", engine="batch", n=len(batch)):
+                outs = self.executor.run([r.matrix for r in batch],
+                                         [r.features for r in batch])
         except Exception as exc:  # noqa: BLE001 — fail the whole flush
             self._t_last = time.perf_counter()
             for r in batch:
@@ -418,8 +421,11 @@ class BatchServingEngine:
             return
         t_done = time.perf_counter()
         self._t_last = t_done
+        lat_hist = obs.histogram("serve_latency_ms", engine="batch")
         for r, y in zip(batch, outs):
-            self._latencies_ms.append((t_done - r.t_submit) * 1e3)
+            lat_ms = (t_done - r.t_submit) * 1e3
+            self._latencies_ms.append(lat_ms)
+            lat_hist.observe(lat_ms)
             with self._close_lock:
                 self._completed += 1
             if not r.future.cancelled():
@@ -502,23 +508,26 @@ class BatchServingEngine:
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> Dict[str, Any]:
-        """Throughput, latency percentiles, compile + padding counters."""
+        """Throughput, latency percentiles, compile + padding counters.
+
+        Canonical keys (``p50_ms``/``p99_ms``); the pre-PR-8 spellings
+        (``latency_ms_p50``/``latency_ms_p99``) resolve via deprecation
+        aliases for one cycle.
+        """
         lat = np.asarray(self._latencies_ms, np.float64)
         elapsed = ((self._t_last - self._t_first)
                    if (self._t_first is not None
                        and self._t_last is not None) else 0.0)
-        return {
+        return obs.renamed_keys({
             "submitted": self._submitted,
             "completed": self._completed,
             "failed": self._failed,
             "req_per_s": (self._completed / elapsed) if elapsed > 0 else 0.0,
-            "latency_ms_p50": float(np.percentile(lat, 50)) if len(lat)
-            else 0.0,
-            "latency_ms_p99": float(np.percentile(lat, 99)) if len(lat)
-            else 0.0,
+            "p50_ms": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            "p99_ms": float(np.percentile(lat, 99)) if len(lat) else 0.0,
             "flushes": dict(self._flushes),
             "executor": self.executor.report(),
-        }
+        }, {"latency_ms_p50": "p50_ms", "latency_ms_p99": "p99_ms"})
 
 
 def make_prefill_step(cfg: ModelConfig, max_len: int):

@@ -40,9 +40,11 @@ import time
 from concurrent.futures import Future
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.batch.block_diag import BatchedSparseMatrix
 from repro.batch.bucketing import (Bucket, canonical_stats, empty_in_bucket,
                                    pad_to_bucket)
@@ -215,8 +217,9 @@ class ContinuousBatchEngine:
         if steps < 1:
             raise ValueError(f"steps must be >= 1, got {steps}")
         fut: Future = Future()
-        with self._lock:
-            bucket = self.executor.bucket_of(adj.stats)
+        with self._lock, obs.span("serve.admit", engine="continuous"):
+            with obs.span("serve.bucket", engine="continuous"):
+                bucket = self.executor.bucket_of(adj.stats)
             d = int(h.shape[1])
             if steps > 1 and bucket.rows != bucket.cols:
                 raise ValueError(
@@ -294,16 +297,32 @@ class ContinuousBatchEngine:
                     for s in lane.slots]
             feats = [s.features if s is not None else lane.zero_h
                      for s in lane.slots]
-        B = BatchedSparseMatrix.from_matrices(
-            mats, formats=(lane.form,), stats=lane.stats)
-        h = jnp.concatenate(feats, axis=0)
-        exe = self.executor.executor_for(lane.key)
-        args = (B.matrix, h) if self.executor.context is None \
-            else (self.executor.context, B.matrix, h)
-        try:
-            y = exe(*args)
-        except Exception as exc:  # noqa: BLE001 — fail the whole lane step
-            return self._fail_lane(lane, occupants, exc)
+        lane_label = self.executor.lane_label(lane.key)
+        with obs.span("serve.lane_step", lane=lane_label,
+                      occupied=len(occupants)):
+            with obs.span("serve.compose", lane=lane_label):
+                B = BatchedSparseMatrix.from_matrices(
+                    mats, formats=(lane.form,), stats=lane.stats)
+                h = jnp.concatenate(feats, axis=0)
+            exe = self.executor.executor_for(lane.key)
+            args = (B.matrix, h) if self.executor.context is None \
+                else (self.executor.context, B.matrix, h)
+            try:
+                with obs.span("serve.execute", lane=lane_label):
+                    t0 = time.perf_counter()
+                    y = exe(*args)
+                    jax.block_until_ready(y)
+                    exec_ms = (time.perf_counter() - t0) * 1e3
+            except Exception as exc:  # noqa: BLE001 — fail the lane step
+                return self._fail_lane(lane, occupants, exc)
+            obs.SENTRY.record_call(lane_label)
+            plan = self.executor.bucket_plan(lane.bucket, lane.d)
+            obs.AUDIT.record_raw(
+                op="spmm", path=lane.form, measured_ms=exec_ms,
+                bucket=lane.bucket.label,
+                costs=plan.costs if plan is not None else None,
+                policy=plan.policy if plan is not None
+                else self.cfg.policy)
         t_done = time.perf_counter()
         bucket = lane.bucket
         with self._lock:
@@ -327,7 +346,10 @@ class ContinuousBatchEngine:
                     self.executor.requests += 1
                     done += 1
                     lane.slots[i] = None
-                    self._latencies_ms.append((t_done - s.t_submit) * 1e3)
+                    lat_ms = (t_done - s.t_submit) * 1e3
+                    self._latencies_ms.append(lat_ms)
+                    obs.histogram("serve_latency_ms",
+                                  engine="continuous").observe(lat_ms)
                     if not s.future.cancelled():
                         s.future.set_result(
                             np.asarray(block[:s.rows_logical]))
@@ -431,6 +453,9 @@ class ContinuousBatchEngine:
     # -- reporting ----------------------------------------------------------
 
     def report(self) -> Dict[str, Any]:
+        """Canonical keys (see DESIGN.md "Observability"); the old
+        ``latency_ms_p50``/``latency_ms_p99`` spellings resolve via
+        deprecation aliases."""
         with self._lock:
             lat = np.asarray(self._latencies_ms, np.float64)
             lanes = {}
@@ -443,15 +468,15 @@ class ContinuousBatchEngine:
                                   / max(lane.slot_steps, 1)),
                     "queued": len(lane.queue),
                 }
-            return {
+            return obs.renamed_keys({
                 "submitted": self.submitted,
                 "completed": self.completed,
                 "failed": self.failed,
                 "pending": self.submitted - self.completed,
-                "latency_ms_p50": (float(np.percentile(lat, 50))
-                                   if len(lat) else 0.0),
-                "latency_ms_p99": (float(np.percentile(lat, 99))
-                                   if len(lat) else 0.0),
+                "p50_ms": (float(np.percentile(lat, 50))
+                           if len(lat) else 0.0),
+                "p99_ms": (float(np.percentile(lat, 99))
+                           if len(lat) else 0.0),
                 "lanes": lanes,
                 "executor": self.executor.report(),
-            }
+            }, {"latency_ms_p50": "p50_ms", "latency_ms_p99": "p99_ms"})

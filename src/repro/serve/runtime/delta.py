@@ -46,6 +46,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.formats import SellCS
 from repro.dispatch.stats import MatrixStats
 from repro.sparse.matrix import SparseMatrix
@@ -321,6 +322,7 @@ class DeltaGraph:
         with self._lock:
             self._pack(self._overlay.densify())
             self.repacks += 1
+            obs.counter("graph_repacks_total", kind="forced").inc()
 
     # -- delta application --------------------------------------------------
 
@@ -338,6 +340,7 @@ class DeltaGraph:
                 dense[int(r), int(c)] = v
                 self._pack(dense)
                 self.repacks += 1
+                obs.counter("graph_repacks_total", kind="slack").inc()
             self._note_delta(("insert", int(r), int(c), float(v)))
 
     def delete(self, r: int, c: int) -> None:
@@ -358,6 +361,7 @@ class DeltaGraph:
 
     def _note_delta(self, d: Delta) -> None:
         self.deltas_applied += 1
+        obs.counter("graph_deltas_total", op=d[0]).inc()
         self._matrix = None
         if self._exact is not None:
             self._exact = None               # lazily recomputed
@@ -466,6 +470,7 @@ class DeltaGraph:
                 self._exact = measured
                 self._matrix = None
             self.repacks += 1
+            obs.counter("graph_repacks_total", kind="background").inc()
             return True
 
     # -- reporting ----------------------------------------------------------

@@ -39,6 +39,7 @@ from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from repro import obs
 from repro.batch.bucketing import (Bucket, BucketingConfig,
                                    DEFAULT_BUCKETING, _round_to,
                                    quantize_up)
@@ -140,6 +141,7 @@ class AdaptiveBucketLadder:
             self._obs["nnz"].append(max(int(stats.nnz), 1))
             self._obs["width"].append(max(int(stats.ell_width), 1))
             self.observed += 1
+            obs.counter("ladder_observed_total").inc()
             self._since_check += 1
             self._maybe_refit()
 
@@ -169,7 +171,9 @@ class AdaptiveBucketLadder:
             return False
         self._since_check = 0
         self.drift_checks += 1
+        obs.counter("ladder_drift_checks_total").inc()
         self.last_drift = self.drift()
+        obs.gauge("ladder_last_drift").set(self.last_drift)
         if self.last_drift <= self.config.drift_threshold:
             return False  # hysteresis: mix hasn't moved, keep the grid
         self._fit()
@@ -185,6 +189,7 @@ class AdaptiveBucketLadder:
             self.snapped_rungs += carried
             self._fit_hist[d] = _log_hist(vals)
         self.refits += 1
+        obs.counter("ladder_refits_total").inc()
         self._since_check = 0
 
     def refit(self) -> None:
@@ -214,6 +219,7 @@ class AdaptiveBucketLadder:
         with self._lock:
             if not self.fitted:
                 self.fallbacks += 1
+                obs.counter("ladder_fallbacks_total").inc()
                 return fixed_bucket_for(stats, self.config.fallback)
             bm, bn = stats.block_m, stats.block_n
             rows = _round_to(self._pick("rows", stats.shape[0]), bm)

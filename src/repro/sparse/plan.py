@@ -19,6 +19,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Dict, Hashable, Optional
 
+from repro import obs
+
 
 @dataclasses.dataclass
 class PlanCacheStats:
@@ -59,9 +61,11 @@ class PlanCache:
         if plan is None:
             self.misses += 1
             GLOBAL_STATS.misses += 1
+            obs.counter("plan_cache_misses_total").inc()
         else:
             self.hits += 1
             GLOBAL_STATS.hits += 1
+            obs.counter("plan_cache_hits_total").inc()
         return plan
 
     def put(self, key: Hashable, plan: Any) -> None:

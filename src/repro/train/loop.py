@@ -8,6 +8,7 @@ from typing import Any, Callable, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models.transformer import lm_loss
 from repro.train.grad_compress import (compress_int8, compress_topk_ef,
@@ -107,9 +108,12 @@ def train_loop(params, state, train_step, data_iter, n_steps: int, *,
     for step in range(n_steps):
         batch = next(data_iter)
         t0 = time.perf_counter()
-        params, state, metrics = step_fn(params, state, batch)
-        loss = float(metrics["loss"])  # blocks; keeps timing honest
+        with obs.span("train.step", step=step):
+            params, state, metrics = step_fn(params, state, batch)
+            loss = float(metrics["loss"])  # blocks; keeps timing honest
         dt = time.perf_counter() - t0
+        obs.histogram("train_step_ms").observe(dt * 1e3)
+        obs.gauge("train_loss").set(loss)
         if health is not None:
             health.record(step, dt)
         if step % log_every == 0:
