@@ -30,6 +30,8 @@ from repro import obs
 from repro.dispatch.cost_model import DEFAULT_COST_MODEL, CostModel
 from repro.dispatch.dispatcher import plan_spmm
 from repro.dispatch.policy import PATH_CSR, PATH_ELL
+from repro.resilience import chaos
+from repro.resilience.errors import TRANSIENT, classify
 from repro.sparse import paths
 from repro.sparse.matrix import SparseMatrix
 from repro.batch.block_diag import BatchedSparseMatrix
@@ -93,7 +95,8 @@ class BucketedExecutor:
                  bucketing: BucketingConfig = DEFAULT_BUCKETING,
                  cost_model: CostModel = DEFAULT_COST_MODEL,
                  ladder: Any = None,
-                 jit: bool = True):
+                 jit: bool = True,
+                 degrade_after: int = 3):
         if form not in ("auto", "csr", "ell"):
             raise ValueError(
                 f"form must be 'auto', 'csr' or 'ell'; got {form!r}")
@@ -127,6 +130,13 @@ class BucketedExecutor:
         # bucket plans made by choose_form, kept for the cost audit (the
         # serving-side predicted-vs-measured rows need the cost vector)
         self._bucket_plans: Dict[Tuple[Bucket, int], Any] = {}
+        # degraded mode: a (bucket, d, form) cell that fails
+        # `degrade_after` consecutive transient executions is excluded
+        # from auto form selection until the process restarts — the
+        # caller replans onto the surviving form (see note_failure)
+        self.degrade_after = int(degrade_after)
+        self._form_failures: Dict[Tuple[Bucket, int, str], int] = {}
+        self._degraded: set = set()
 
     # -- planning -----------------------------------------------------------
 
@@ -159,11 +169,38 @@ class BucketedExecutor:
             if not cand:
                 raise ValueError(
                     f"group carries no bucketable form: {tuple(carried)}")
+            # degraded mode: skip forms that kept failing in this cell,
+            # unless that would leave no candidate at all
+            healthy = tuple(p for p in cand
+                            if (bucket, d, p) not in self._degraded)
             plan = plan_spmm(canonical_stats(bucket), d, policy=self.policy,
-                             cost_model=self.cost_model, candidates=cand)
+                             cost_model=self.cost_model,
+                             candidates=healthy or cand)
             self._bucket_plans[(bucket, d)] = plan
             form = plan.path
         return form, form
+
+    def note_failure(self, bucket: Bucket, d: int, form: str) -> bool:
+        """Record one transient execution failure for a cell.  Returns
+        True exactly when the cell's form newly crosses
+        ``degrade_after`` consecutive failures and enters degraded mode
+        (the caller should replan the traffic onto a surviving form)."""
+        key = (bucket, d, form)
+        if key in self._degraded:
+            return False
+        n = self._form_failures.get(key, 0) + 1
+        self._form_failures[key] = n
+        if n < self.degrade_after:
+            return False
+        self._degraded.add(key)
+        obs.counter("resilience_degraded_total", form=form).inc()
+        obs.counter("resilience_recoveries_total", site="degrade").inc()
+        return True
+
+    def note_success(self, bucket: Bucket, d: int, form: str) -> None:
+        """A successful execution resets the consecutive-failure count
+        (a degraded form stays degraded — re-probation would flap)."""
+        self._form_failures.pop((bucket, d, form), None)
 
     def bucket_plan(self, bucket: Bucket, d: int):
         """The cost-model plan made for this (bucket, d) cell, when one
@@ -202,6 +239,9 @@ class BucketedExecutor:
         lane = self.lane_label(key)
         if self.jit:
             def run(*args):
+                # trace-time chaos first, so an injected compile failure
+                # does not pollute the compile counters or the sentry
+                chaos.hook("executor.compile", lane=lane)
                 self.compiles += 1  # runs at trace time only
                 obs.SENTRY.record_compile(lane)
                 return body(*args)
@@ -277,9 +317,17 @@ class BucketedExecutor:
             else (self.context, B.matrix, h)
         with obs.span("serve.execute", lane=lane):
             t0 = time.perf_counter()
-            y = self._executor_for(key)(*args)
-            jax.block_until_ready(y)
+            try:
+                chaos.hook("executor.execute", lane=lane, form=path)
+                y = self._executor_for(key)(*args)
+                jax.block_until_ready(y)
+            except Exception as exc:
+                if classify(exc) == TRANSIENT:
+                    self.note_failure(bucket, d, path)
+                raise
             exec_ms = (time.perf_counter() - t0) * 1e3
+        y = chaos.corrupt("executor.output", y, lane=lane)
+        self.note_success(bucket, d, path)
         obs.SENTRY.record_call(lane)
         plan = self.bucket_plan(bucket, d)
         obs.AUDIT.record_raw(
@@ -314,4 +362,7 @@ class BucketedExecutor:
         }
         if self.ladder is not None:
             out["ladder"] = self.ladder.report()
+        if self._degraded:
+            out["degraded"] = sorted(
+                f"{b.label}/d{d}/{f}" for b, d, f in self._degraded)
         return obs.renamed_keys(out, {"padding": "waste"})

@@ -9,6 +9,15 @@ the latest checkpoint; a background thread makes saves non-blocking
 Restore is mesh-independent: leaves are saved unsharded (gathered), so a
 checkpoint from a 256-chip run restores onto 512 chips or 1 CPU —
 the elastic-scaling path (ft/resharding.py) re-places them.
+
+Resilience: a crash mid-write (chaos site ``checkpoint.write``) only
+ever loses the *in-flight* save — the previous published step survives
+the atomic-rename protocol.  An async save that fails records the error
+(``last_error``/``failed_saves``) instead of silently dying with its
+thread, and :meth:`restore` skips corrupt ``step_<N>`` directories
+(truncated metadata, partial ``.npy``, shape drift) falling back to the
+newest intact step, counting each skip in
+``resilience_ckpt_corrupt_total``.
 """
 from __future__ import annotations
 
@@ -22,6 +31,9 @@ from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
+
+from repro import obs
+from repro.resilience import chaos
 
 _SEP = "__"
 
@@ -52,6 +64,8 @@ class Checkpointer:
         self.keep = keep
         self.async_save = async_save
         self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+        self.failed_saves = 0
         os.makedirs(directory, exist_ok=True)
 
     # -- save ----------------------------------------------------------------
@@ -63,11 +77,22 @@ class Checkpointer:
         self.wait()  # one in-flight save at a time
         if self.async_save and not block:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_leaves, meta or {}),
-                daemon=True)
+                target=self._write_guarded,
+                args=(step, host_leaves, meta or {}), daemon=True)
             self._thread.start()
         else:
             self._write(step, host_leaves, meta or {})
+
+    def _write_guarded(self, step: int, host_leaves, meta: Dict):
+        """Async writer body: a failed save must not die silently with
+        its thread — the error is recorded and the previously published
+        step keeps serving restores."""
+        try:
+            self._write(step, host_leaves, meta)
+        except BaseException as exc:  # noqa: BLE001 — recorded, not lost
+            self.last_error = exc
+            self.failed_saves += 1
+            obs.counter("resilience_ckpt_save_failures_total").inc()
 
     def _write(self, step: int, host_leaves: Dict[str, np.ndarray],
                meta: Dict):
@@ -78,6 +103,9 @@ class Checkpointer:
                 np.save(os.path.join(tmp, key + ".npy"), arr)
             with open(os.path.join(tmp, "metadata.json"), "w") as f:
                 json.dump({"step": step, **meta}, f)
+            # chaos: a crash here loses only this in-flight save — the
+            # temp dir is swept and the previous step stays published
+            chaos.hook("checkpoint.write", step=step)
             if os.path.exists(final):
                 shutil.rmtree(final)
             os.rename(tmp, final)  # atomic publish
@@ -117,11 +145,38 @@ class Checkpointer:
 
         ``sharding_tree``: optional pytree of jax.sharding.Sharding — leaves
         are device_put with it (the elastic re-placement hook).
+
+        With ``step=None`` (the default), corrupt step directories —
+        truncated metadata, partial/unreadable ``.npy`` leaves, shape
+        drift — are skipped, falling back to the newest *intact* step.
+        An explicit ``step=`` loads exactly that step and raises on
+        corruption.
         """
-        step = step if step is not None else self.latest_step()
-        if step is None:
+        if step is not None:
+            return self._load_step(step, target_tree, sharding_tree)
+        steps = self.all_steps()
+        if not steps:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        last_exc: Optional[BaseException] = None
+        for s in reversed(steps):
+            try:
+                tree = self._load_step(s, target_tree, sharding_tree)
+            except Exception as exc:  # noqa: BLE001 — corrupt: try older
+                last_exc = exc
+                obs.counter("resilience_ckpt_corrupt_total").inc()
+                continue
+            if s != steps[-1]:
+                obs.counter("resilience_recoveries_total",
+                            site="checkpoint").inc()
+            return tree
+        raise FileNotFoundError(
+            f"no intact checkpoint in {self.directory}: all of "
+            f"{steps} are corrupt (last error: {last_exc!r})")
+
+    def _load_step(self, step: int, target_tree, sharding_tree=None):
         d = os.path.join(self.directory, f"step_{step:08d}")
+        with open(os.path.join(d, "metadata.json")) as f:
+            json.load(f)  # truncated metadata = incomplete publish
         keys, treedef = _flatten_with_paths(target_tree)
         shardings = None
         if sharding_tree is not None:

@@ -27,6 +27,7 @@ import queue as queue_mod
 import threading
 import time
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -36,6 +37,13 @@ import numpy as np
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models.transformer import decode_step, init_cache, prefill
+from repro.resilience import chaos
+from repro.resilience.errors import (FATAL, POISON, TRANSIENT,
+                                     DeadlineExceededError,
+                                     EngineClosedError, NaNOutputError,
+                                     TransientExecutorError, classify)
+from repro.resilience.retry import RetryBudget, RetryPolicy
+from repro.resilience.supervisor import WorkerSupervisor
 
 
 @dataclasses.dataclass
@@ -224,6 +232,14 @@ class BatchServeConfig:
     # LadderConfig.
     adaptive: bool = False
     ladder: Any = None
+    # -- resilience (see DESIGN.md "Resilience") ----------------------------
+    retry: RetryPolicy = RetryPolicy()  # per-request backoff + allowance
+    retry_budget: int = 64              # engine-wide retry tokens
+    retry_refill_per_s: float = 8.0
+    guard_nonfinite: bool = True        # quarantine NaN/Inf outputs
+    default_timeout_s: Optional[float] = 60.0  # infer() deadline
+    max_worker_restarts: int = 3
+    seed: int = 0                       # backoff-jitter rng
 
 
 @dataclasses.dataclass
@@ -232,6 +248,8 @@ class _Request:
     features: Any              # [n_nodes, d]
     future: Future
     t_submit: float
+    attempts: int = 0          # transient retries consumed
+    tag: Any = None            # chaos/match + caller bookkeeping label
 
 
 class BatchServingEngine:
@@ -291,9 +309,19 @@ class BatchServingEngine:
         self._failed = 0
         self._close_lock = threading.Lock()
         self._stop = threading.Event()
-        self._worker = threading.Thread(target=self._serve_loop,
-                                        name="batch-serve", daemon=True)
-        self._worker.start()
+        self._rng = np.random.default_rng(self.scfg.seed)
+        self._budget = RetryBudget(self.scfg.retry_budget,
+                                   self.scfg.retry_refill_per_s)
+        self._quarantined = 0
+        self._sup = WorkerSupervisor(
+            "batch-serve", self._serve_loop,
+            max_restarts=self.scfg.max_worker_restarts)
+        self._sup.start()
+
+    @property
+    def _worker(self) -> threading.Thread:
+        """The current serving thread (restarts under the supervisor)."""
+        return self._sup._thread
 
     @classmethod
     def for_gcn(cls, params, *, scfg: Optional[BatchServeConfig] = None,
@@ -320,19 +348,22 @@ class BatchServingEngine:
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, matrix, features) -> Future:
+    def submit(self, matrix, features, *, tag: Any = None) -> Future:
         """Enqueue one request; resolves to [n_nodes, d_out] (numpy).
 
         ``matrix`` is the graph's (normalized) adjacency as a
         ``SparseMatrix`` — or a ``Graph``, whose adjacency is taken.
         Blocks while the admission queue is full (bounded backpressure).
+        A dead serving worker is restarted here (bounded by
+        ``max_worker_restarts``).
         """
         if self._stop.is_set():
-            raise RuntimeError("engine is closed")
+            raise EngineClosedError("engine is closed")
+        self._sup.ensure()
         adj = getattr(matrix, "adj", matrix)
         with obs.span("serve.admit", engine="batch"):
             req = _Request(matrix=adj, features=features, future=Future(),
-                           t_submit=time.perf_counter())
+                           t_submit=time.perf_counter(), tag=tag)
             if self._t_first is None:
                 self._t_first = req.t_submit
             self._submitted += 1
@@ -343,14 +374,37 @@ class BatchServingEngine:
             self._fail_queued()
         return req.future
 
-    def infer(self, matrix, features) -> np.ndarray:
-        """Synchronous convenience wrapper around :meth:`submit`."""
-        return self.submit(matrix, features).result()
+    def infer(self, matrix, features, *,
+              timeout: Optional[float] = None) -> np.ndarray:
+        """Synchronous convenience wrapper around :meth:`submit`.
+
+        ``timeout`` (default ``scfg.default_timeout_s``) bounds the
+        wait; expiry raises :class:`DeadlineExceededError` (a
+        :class:`TimeoutError`) instead of blocking forever on a stuck
+        future.
+        """
+        t = self.scfg.default_timeout_s if timeout is None else timeout
+        try:
+            return self.submit(matrix, features).result(t)
+        except DeadlineExceededError:
+            raise
+        except (TimeoutError, _FutTimeout):
+            raise DeadlineExceededError(
+                f"infer: no result within {t}s") from None
 
     # -- worker -------------------------------------------------------------
 
     def _serve_loop(self) -> None:
         while not self._stop.is_set():
+            # chaos fires before any request is picked up, so an
+            # injected worker death strands nothing — the supervisor
+            # restarts the loop on the next submit()/drain()
+            try:
+                chaos.hook("serve.worker")
+            except chaos.WorkerKilled:
+                return  # injected death: the supervisor restarts us
+            except Exception:
+                continue  # any other injected fault: keep serving
             try:
                 first = self._queue.get(timeout=0.05)
             except queue_mod.Empty:
@@ -406,23 +460,34 @@ class BatchServingEngine:
         self._flush(batch)
 
     def _flush(self, batch: List[_Request]) -> None:
+        outs, exc = self._try_run(batch)
+        if exc is None:
+            self._complete(batch, outs)
+        else:
+            self._recover(batch, exc)
+
+    def _try_run(self, batch: List[_Request]):
+        """Execute the batch; returns (outs, None) or (None, exc)."""
+        tags = [r.tag for r in batch if r.tag is not None]
         try:
             with obs.span("serve.flush", engine="batch", n=len(batch)):
+                chaos.hook("serve.flush", tags=tags, n=len(batch))
                 outs = self.executor.run([r.matrix for r in batch],
                                          [r.features for r in batch])
-        except Exception as exc:  # noqa: BLE001 — fail the whole flush
-            self._t_last = time.perf_counter()
-            for r in batch:
-                with self._close_lock:
-                    self._completed += 1  # resolved (with an error):
-                    self._failed += 1     # drain must not wait on these
-                if not r.future.cancelled():
-                    r.future.set_exception(exc)
-            return
+            return outs, None
+        except Exception as exc:  # noqa: BLE001 — classified by _recover
+            return None, exc
+
+    def _complete(self, batch: List[_Request], outs) -> None:
         t_done = time.perf_counter()
         self._t_last = t_done
         lat_hist = obs.histogram("serve_latency_ms", engine="batch")
         for r, y in zip(batch, outs):
+            if self.scfg.guard_nonfinite and not np.isfinite(y).all():
+                self._fail_requests([r], NaNOutputError(
+                    "non-finite output quarantined "
+                    f"(request rows={np.shape(y)[0]})"), quarantine="nan")
+                continue
             lat_ms = (t_done - r.t_submit) * 1e3
             self._latencies_ms.append(lat_ms)
             lat_hist.observe(lat_ms)
@@ -431,15 +496,81 @@ class BatchServingEngine:
             if not r.future.cancelled():
                 r.future.set_result(y)
 
+    def _recover(self, batch: List[_Request], exc, *,
+                 retried: bool = False) -> None:
+        """A flush failed: retry, bisect, quarantine (see DESIGN.md
+        "Resilience").  Innocent co-batched requests complete from the
+        bisection probes; only the pinned culprit fails."""
+        kind = classify(exc)
+        if kind == FATAL:
+            self._fail_requests(batch, exc)
+            return
+        if len(batch) == 1:
+            r = batch[0]
+            if kind == POISON:
+                self._fail_requests(batch, exc, quarantine="poison")
+                return
+            r.attempts += 1
+            if self.scfg.retry.allows(r.attempts + 1) \
+                    and self._budget.spend():
+                obs.counter("resilience_retries_total",
+                            site="serve.flush", kind=kind).inc()
+                time.sleep(self.scfg.retry.backoff_s(
+                    r.attempts + 1, self._rng))
+                outs, exc2 = self._try_run(batch)
+                if exc2 is None:
+                    self._complete(batch, outs)
+                else:
+                    self._recover(batch, exc2, retried=True)
+                return
+            self._fail_requests(batch, TransientExecutorError(
+                f"retries exhausted after {r.attempts} attempts "
+                f"(last error: {exc!r})"))
+            return
+        if kind == TRANSIENT and not retried and self._budget.spend():
+            obs.counter("resilience_retries_total",
+                        site="serve.flush", kind=kind).inc()
+            time.sleep(self.scfg.retry.backoff_s(2, self._rng))
+            outs, exc2 = self._try_run(batch)
+            if exc2 is None:
+                self._complete(batch, outs)
+                return
+            exc, kind = exc2, classify(exc2)
+            if kind == FATAL:
+                self._fail_requests(batch, exc)
+                return
+        mid = len(batch) // 2
+        for half in (batch[:mid], batch[mid:]):
+            outs, exc_h = self._try_run(half)
+            if exc_h is None:
+                self._complete(half, outs)
+            else:
+                self._recover(half, exc_h, retried=True)
+
+    def _fail_requests(self, batch: List[_Request], exc, *,
+                       quarantine: Optional[str] = None) -> None:
+        self._t_last = time.perf_counter()
+        for r in batch:
+            if quarantine is not None:
+                self._quarantined += 1
+                obs.counter("resilience_quarantined_total",
+                            kind=quarantine).inc()
+            with self._close_lock:
+                self._completed += 1  # resolved (with an error):
+                self._failed += 1     # drain must not wait on these
+            if not r.future.done() and not r.future.cancelled():
+                r.future.set_exception(exc)
+
     # -- lifecycle ----------------------------------------------------------
 
     def drain(self, timeout: float = 60.0) -> None:
         """Block until everything submitted so far has completed."""
         t0 = time.perf_counter()
         while self._completed < self._submitted:
-            if not self._worker.is_alive() and not self._stop.is_set():
-                # a dead worker can never complete the backlog: fail the
-                # queued futures now instead of spinning to the timeout
+            if not self._stop.is_set() and not self._sup.ensure():
+                # the worker is dead beyond its restart budget and can
+                # never complete the backlog: fail the queued futures
+                # now instead of spinning to the timeout
                 self._fail_queued()
                 if self._completed < self._submitted:
                     raise RuntimeError(
@@ -467,6 +598,7 @@ class BatchServingEngine:
         self._flushes = {"full": 0, "deadline": 0}
         self._t_first = self._t_last = None
         self._submitted = self._completed = self._failed = 0
+        self._quarantined = 0
 
     def _fail_queued(self) -> None:
         """Fail everything still queued so no future blocks forever."""
@@ -479,7 +611,7 @@ class BatchServingEngine:
                 self._completed += 1
                 self._failed += 1
             if not req.future.cancelled():
-                req.future.set_exception(RuntimeError("engine closed"))
+                req.future.set_exception(EngineClosedError("engine closed"))
 
     def close(self) -> None:
         """Shut down, leaving no future unresolved.
@@ -496,7 +628,7 @@ class BatchServingEngine:
             except Exception:  # noqa: BLE001 — still sweep below
                 pass
         self._stop.set()
-        self._worker.join(timeout=5.0)
+        self._sup.join(timeout=5.0)
         self._fail_queued()
 
     def __enter__(self) -> "BatchServingEngine":
@@ -527,6 +659,11 @@ class BatchServingEngine:
             "p99_ms": float(np.percentile(lat, 99)) if len(lat) else 0.0,
             "flushes": dict(self._flushes),
             "executor": self.executor.report(),
+            "resilience": {
+                "quarantined": self._quarantined,
+                "retry_tokens": self._budget.remaining(),
+                "worker_restarts": self._sup.restarts,
+            },
         }, {"latency_ms_p50": "p50_ms", "latency_ms_p99": "p99_ms"})
 
 

@@ -30,6 +30,19 @@ Mechanics (all shapes static — the engine never retraces on occupancy):
 
 Padding is paid once per request at admission (``pad_to_bucket`` +
 feature row padding), not once per flush.
+
+Resilience (see DESIGN.md "Resilience"): a failed lane step no longer
+collaterally fails every co-batched occupant.  The engine retries the
+step (backoff + jitter, bounded by a per-request allowance and an
+engine-wide token-bucket budget), then **bisects** the occupants to
+isolate the culprit — poison requests are quarantined with
+:class:`PoisonRequestError` while innocents complete from the probe
+executions.  NaN/Inf output blocks are quarantined instead of returned.
+An executor form that keeps failing is *degraded* (the lane rebuilds on
+the surviving form), an over-full wait queue sheds the lowest-priority
+/ nearest-deadline request with :class:`RequestShedError`, and a dead
+background worker restarts under a bounded supervisor.  Every recovery
+action moves an ``obs`` counter.
 """
 from __future__ import annotations
 
@@ -38,6 +51,7 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future
+from concurrent.futures import TimeoutError as _FutTimeout
 from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
@@ -50,6 +64,14 @@ from repro.batch.bucketing import (Bucket, canonical_stats, empty_in_bucket,
                                    pad_to_bucket)
 from repro.batch.executor import BucketedExecutor, ExecutorKey
 from repro.dispatch.stats import MatrixStats
+from repro.resilience import chaos
+from repro.resilience.errors import (FATAL, POISON, TRANSIENT,
+                                     DeadlineExceededError,
+                                     EngineClosedError, NaNOutputError,
+                                     RequestShedError,
+                                     TransientExecutorError, classify)
+from repro.resilience.retry import RetryBudget, RetryPolicy
+from repro.resilience.supervisor import WorkerSupervisor
 from repro.serve.runtime.ladder import (AdaptiveBucketLadder, LadderConfig,
                                         DEFAULT_LADDER)
 from repro.sparse import paths
@@ -59,7 +81,7 @@ Array = Any
 
 @dataclasses.dataclass
 class ContinuousConfig:
-    """Slot-pool and grid knobs of the continuous engine."""
+    """Slot-pool, grid, and resilience knobs of the continuous engine."""
 
     slots: int = 8             # slot pool per (bucket, d) lane
     policy: str = "auto"       # dispatch policy inside the executor
@@ -74,6 +96,15 @@ class ContinuousConfig:
     # has waited this long — hot lanes run packed, cold lanes still
     # bound their latency (the continuous analog of max_delay_ms)
     max_wait_ms: float = 5.0
+    # -- resilience ---------------------------------------------------------
+    retry: RetryPolicy = RetryPolicy()  # per-request backoff + allowance
+    retry_budget: int = 64              # engine-wide retry tokens
+    retry_refill_per_s: float = 8.0
+    guard_nonfinite: bool = True        # quarantine NaN/Inf output blocks
+    default_deadline_ms: Optional[float] = None  # per-request deadline
+    default_timeout_s: Optional[float] = 60.0    # infer() overall deadline
+    max_worker_restarts: int = 3
+    seed: int = 0                       # backoff-jitter rng
 
 
 @dataclasses.dataclass
@@ -88,6 +119,13 @@ class _SlotReq:
     rows_logical: int          # rows to trim the final output to
     real_rows: int
     real_nnz: int
+    source: Any = None         # unpadded adjacency (lane rebuilds re-pad)
+    source_h: Any = None       # unpadded features
+    steps_total: int = 1
+    attempts: int = 0          # transient retries consumed
+    priority: int = 0          # higher = shed later
+    deadline: Optional[float] = None  # absolute perf_counter deadline
+    tag: Any = None            # chaos/match + caller bookkeeping label
 
 
 class _Lane:
@@ -125,7 +163,7 @@ class _Lane:
 
     def admit(self, req: _SlotReq) -> bool:
         """Seat the request in a free slot, else queue it (False when
-        the wait queue is full — caller backpressures)."""
+        the wait queue is full — caller sheds)."""
         for i, s in enumerate(self.slots):
             if s is None:
                 self.slots[i] = req
@@ -169,15 +207,21 @@ class ContinuousBatchEngine:
         self._lanes: Dict[Tuple[Bucket, int], _Lane] = {}
         self._lock = threading.RLock()
         self._latencies_ms: List[float] = []
+        self._rng = np.random.default_rng(self.cfg.seed)
+        self._budget = RetryBudget(self.cfg.retry_budget,
+                                   self.cfg.retry_refill_per_s)
         self.submitted = 0
         self.completed = 0
         self.failed = 0
+        self.quarantined = 0
+        self.shed = 0
         self._stop = threading.Event()
-        self._worker: Optional[threading.Thread] = None
+        self._sup: Optional[WorkerSupervisor] = None
         if self.cfg.background:
-            self._worker = threading.Thread(
-                target=self._step_loop, name="continuous-serve", daemon=True)
-            self._worker.start()
+            self._sup = WorkerSupervisor(
+                "continuous-serve", self._step_loop,
+                max_restarts=self.cfg.max_worker_restarts)
+            self._sup.start()
 
     @classmethod
     def for_gcn(cls, params, *, cfg: Optional[ContinuousConfig] = None
@@ -196,15 +240,26 @@ class ContinuousBatchEngine:
 
     # -- admission ----------------------------------------------------------
 
-    def submit(self, matrix, features, *, steps: int = 1) -> Future:
+    def submit(self, matrix, features, *, steps: int = 1,
+               priority: int = 0, deadline_ms: Optional[float] = None,
+               tag: Any = None) -> Future:
         """Admit one request; resolves to [n_nodes, d_out] (numpy).
 
         ``steps > 1`` re-feeds the output as the next step's features
         (requires a square bucket and ``d_out == d``) — the request
-        holds its slot until all steps ran.
+        holds its slot until all steps ran.  ``priority`` orders load
+        shedding (lower sheds first); ``deadline_ms`` (default
+        ``cfg.default_deadline_ms``) bounds total time in the system —
+        an expired queued request fails with
+        :class:`DeadlineExceededError`.  When the wait queue is over
+        capacity the least valuable request is shed with
+        :class:`RequestShedError` (possibly this one: the returned
+        future then already holds the error).
         """
         if self._stop.is_set():
-            raise RuntimeError("engine is closed")
+            raise EngineClosedError("engine is closed")
+        if self._sup is not None:
+            self._sup.ensure()
         adj = getattr(matrix, "adj", matrix)
         if adj.stats is None:
             raise ValueError(
@@ -216,51 +271,98 @@ class ContinuousBatchEngine:
                 f"features {h.shape} do not match matrix {adj.shape}")
         if steps < 1:
             raise ValueError(f"steps must be >= 1, got {steps}")
+        ddl_ms = (deadline_ms if deadline_ms is not None
+                  else self.cfg.default_deadline_ms)
         fut: Future = Future()
         with self._lock, obs.span("serve.admit", engine="continuous"):
-            with obs.span("serve.bucket", engine="continuous"):
-                bucket = self.executor.bucket_of(adj.stats)
-            d = int(h.shape[1])
-            if steps > 1 and bucket.rows != bucket.cols:
+            lane = self._lane_for(adj, int(h.shape[1]), h.dtype)
+            if steps > 1 and lane.bucket.rows != lane.bucket.cols:
                 raise ValueError(
                     f"steps={steps} needs a square bucket to re-feed the "
-                    f"output; got {bucket.rows}x{bucket.cols}")
-            lane = self._lanes.get((bucket, d))
-            if lane is None:
-                carried = [f for f in ("ell", "csr") if adj.has_form(f)]
-                form, _ = self.executor.choose_form(bucket, d, carried)
-                lane = _Lane(bucket, d, form, self.cfg.slots, h.dtype,
-                             self.cfg.queue_depth)
-                self._lanes[(bucket, d)] = lane
-            mat = adj if adj.has_form(lane.form) else adj.to(lane.form)
+                    f"output; got {lane.bucket.rows}x{lane.bucket.cols}")
+            t_submit = time.perf_counter()
             req = _SlotReq(
-                matrix=pad_to_bucket(mat, bucket, form=lane.form),
-                features=paths.pad_rows(h.astype(lane.dtype), bucket.cols),
-                future=fut, t_submit=time.perf_counter(),
+                matrix=pad_to_bucket(
+                    adj if adj.has_form(lane.form) else adj.to(lane.form),
+                    lane.bucket, form=lane.form),
+                features=paths.pad_rows(h.astype(lane.dtype),
+                                        lane.bucket.cols),
+                future=fut, t_submit=t_submit,
                 remaining=steps, rows_logical=adj.shape[0],
-                real_rows=adj.shape[0], real_nnz=adj.stats.nnz)
-            if not lane.admit(req):
-                raise RuntimeError(
-                    f"lane {bucket.label}/d{d} wait queue is full "
-                    f"({lane.queue_depth})")
+                real_rows=adj.shape[0], real_nnz=adj.stats.nnz,
+                source=adj, source_h=h, steps_total=steps,
+                priority=priority, tag=tag,
+                deadline=(t_submit + ddl_ms / 1e3)
+                if ddl_ms is not None else None)
             self.submitted += 1
+            if not lane.admit(req):
+                self._shed_for(lane, req)
         return fut
 
-    def infer(self, matrix, features, *, steps: int = 1) -> np.ndarray:
-        """Synchronous convenience: submit, step to completion, return."""
-        fut = self.submit(matrix, features, steps=steps)
-        if self._worker is None:
-            while not fut.done():
-                # a step may complete nothing yet still make progress
-                # (multi-step requests hold their slot) — stall only
-                # when no lane has work at all
-                if self.step(force=True) == 0 and not fut.done():
-                    with self._lock:
-                        stalled = all(l.occupancy == 0
-                                      for l in self._lanes.values())
-                    if stalled:
-                        raise RuntimeError(
-                            "request did not complete but no lane has work")
+    def _lane_for(self, adj, d: int, dtype) -> _Lane:
+        """The (bucket, d) lane serving this request (lock held)."""
+        with obs.span("serve.bucket", engine="continuous"):
+            bucket = self.executor.bucket_of(adj.stats)
+        lane = self._lanes.get((bucket, d))
+        if lane is None:
+            carried = [f for f in ("ell", "csr") if adj.has_form(f)]
+            form, _ = self.executor.choose_form(bucket, d, carried)
+            lane = _Lane(bucket, d, form, self.cfg.slots, dtype,
+                         self.cfg.queue_depth)
+            self._lanes[(bucket, d)] = lane
+        return lane
+
+    def _shed_for(self, lane: _Lane, incoming: _SlotReq) -> None:
+        """Wait queue over capacity: shed the least valuable request —
+        lowest priority first, nearest deadline breaking ties (lock
+        held)."""
+        def shed_key(s: _SlotReq):
+            return (s.priority,
+                    s.deadline if s.deadline is not None else float("inf"))
+
+        victim = min([*lane.queue, incoming], key=shed_key)
+        if victim is not incoming:
+            lane.queue.remove(victim)
+            lane.admit(incoming)
+        self.shed += 1
+        obs.counter("resilience_shed_total", reason="queue_full").inc()
+        self._finish_error(victim, RequestShedError(
+            f"lane {lane.bucket.label}/d{lane.d} over capacity "
+            f"({lane.queue_depth} queued): request shed "
+            f"(priority={victim.priority})"))
+
+    def infer(self, matrix, features, *, steps: int = 1,
+              timeout: Optional[float] = None, **submit_kw) -> np.ndarray:
+        """Synchronous convenience: submit, step to completion, return.
+
+        ``timeout`` (default ``cfg.default_timeout_s``) bounds the wait;
+        expiry raises :class:`DeadlineExceededError` (a
+        :class:`TimeoutError`) instead of blocking forever.
+        """
+        t = self.cfg.default_timeout_s if timeout is None else timeout
+        fut = self.submit(matrix, features, steps=steps, **submit_kw)
+        if self._sup is not None:
+            try:
+                return fut.result(t)
+            except _FutTimeout as exc:
+                if isinstance(exc, DeadlineExceededError):
+                    raise
+                raise DeadlineExceededError(
+                    f"infer: no result within {t}s") from None
+        t_deadline = None if t is None else time.perf_counter() + t
+        while not fut.done():
+            if t_deadline is not None and time.perf_counter() > t_deadline:
+                raise DeadlineExceededError(f"infer: no result within {t}s")
+            # a step may complete nothing yet still make progress
+            # (multi-step requests hold their slot) — stall only
+            # when no lane has work at all
+            if self.step(force=True) == 0 and not fut.done():
+                with self._lock:
+                    stalled = all(l.occupancy == 0
+                                  for l in self._lanes.values())
+                if stalled:
+                    raise RuntimeError(
+                        "request did not complete but no lane has work")
         return fut.result()
 
     # -- stepping -----------------------------------------------------------
@@ -269,12 +371,24 @@ class ContinuousBatchEngine:
         """Run one execution over every *ready* lane (slot pool full,
         or oldest occupant past ``max_wait_ms`` — ``force`` runs any
         lane with occupants); resolve finished slots and recycle them.
+        Expired queued requests fail with DeadlineExceededError.
         Returns requests completed."""
         now = time.perf_counter()
         wait_s = self.cfg.max_wait_ms / 1e3
+        expired: List[_SlotReq] = []
         with self._lock:
             lanes = []
             for lane in self._lanes.values():
+                if lane.queue and any(s.deadline is not None
+                                      and now > s.deadline
+                                      for s in lane.queue):
+                    keep: Deque[_SlotReq] = collections.deque()
+                    for s in lane.queue:
+                        if s.deadline is not None and now > s.deadline:
+                            expired.append(s)
+                        else:
+                            keep.append(s)
+                    lane.queue = keep
                 occupants = [s for s in lane.slots if s is not None]
                 if not occupants:
                     continue
@@ -282,7 +396,12 @@ class ContinuousBatchEngine:
                         or now - min(s.t_submit for s in occupants)
                         >= wait_s):
                     lanes.append(lane)
-        done = 0
+        for s in expired:
+            obs.counter("resilience_shed_total", reason="deadline").inc()
+            self.shed += 1
+            self._finish_error(s, DeadlineExceededError(
+                "request deadline expired while queued"))
+        done = len(expired)
         for lane in lanes:
             done += self._step_lane(lane)
         return done
@@ -291,97 +410,249 @@ class ContinuousBatchEngine:
         with self._lock:
             occupants = [(i, s) for i, s in enumerate(lane.slots)
                          if s is not None]
-            if not occupants:
-                return 0
-            mats = [s.matrix if s is not None else lane.dummy
-                    for s in lane.slots]
-            feats = [s.features if s is not None else lane.zero_h
-                     for s in lane.slots]
+        if not occupants:
+            return 0
+        y, exc = self._try_execute(lane, occupants)
+        if exc is None:
+            done = self._complete_slots(lane, y, occupants)
+        else:
+            done = self._recover(lane, occupants, exc)
+        with self._lock:
+            lane.recycle()
+        return done
+
+    def _try_execute(self, lane: _Lane, subset) -> Tuple[Any, Any]:
+        """Compose + execute the given occupant subset (free and
+        excluded slots ride as dummies).  Returns (y, None) on success,
+        (None, exc) on failure — never raises."""
+        with self._lock:
+            mats = [lane.dummy] * len(lane.slots)
+            feats: List[Any] = [lane.zero_h] * len(lane.slots)
+            for i, s in subset:
+                mats[i] = s.matrix
+                feats[i] = s.features
         lane_label = self.executor.lane_label(lane.key)
-        with obs.span("serve.lane_step", lane=lane_label,
-                      occupied=len(occupants)):
-            with obs.span("serve.compose", lane=lane_label):
-                B = BatchedSparseMatrix.from_matrices(
-                    mats, formats=(lane.form,), stats=lane.stats)
-                h = jnp.concatenate(feats, axis=0)
-            exe = self.executor.executor_for(lane.key)
-            args = (B.matrix, h) if self.executor.context is None \
-                else (self.executor.context, B.matrix, h)
-            try:
+        tags = [s.tag for _, s in subset if s.tag is not None]
+        try:
+            with obs.span("serve.lane_step", lane=lane_label,
+                          occupied=len(subset)):
+                with obs.span("serve.compose", lane=lane_label):
+                    B = BatchedSparseMatrix.from_matrices(
+                        mats, formats=(lane.form,), stats=lane.stats)
+                    h = jnp.concatenate(feats, axis=0)
+                exe = self.executor.executor_for(lane.key)
+                args = (B.matrix, h) if self.executor.context is None \
+                    else (self.executor.context, B.matrix, h)
                 with obs.span("serve.execute", lane=lane_label):
+                    chaos.hook("continuous.execute", lane=lane_label,
+                               tags=tags, form=lane.form)
                     t0 = time.perf_counter()
                     y = exe(*args)
                     jax.block_until_ready(y)
                     exec_ms = (time.perf_counter() - t0) * 1e3
-            except Exception as exc:  # noqa: BLE001 — fail the lane step
-                return self._fail_lane(lane, occupants, exc)
-            obs.SENTRY.record_call(lane_label)
-            plan = self.executor.bucket_plan(lane.bucket, lane.d)
-            obs.AUDIT.record_raw(
-                op="spmm", path=lane.form, measured_ms=exec_ms,
-                bucket=lane.bucket.label,
-                costs=plan.costs if plan is not None else None,
-                policy=plan.policy if plan is not None
-                else self.cfg.policy)
-        t_done = time.perf_counter()
-        bucket = lane.bucket
+                y = chaos.corrupt("continuous.output", y,
+                                  lane=lane_label, tags=tags)
+        except Exception as exc:  # noqa: BLE001 — classified by caller
+            return None, exc
+        self.executor.note_success(lane.bucket, lane.d, lane.form)
+        obs.SENTRY.record_call(lane_label)
+        plan = self.executor.bucket_plan(lane.bucket, lane.d)
+        obs.AUDIT.record_raw(
+            op="spmm", path=lane.form, measured_ms=exec_ms,
+            bucket=lane.bucket.label,
+            costs=plan.costs if plan is not None else None,
+            policy=plan.policy if plan is not None
+            else self.cfg.policy)
         with self._lock:
             self.executor.calls += 1
             lane.steps += 1
             lane.slot_steps += len(lane.slots)
-            lane.occupied_steps += len(occupants)
+            lane.occupied_steps += len(subset)
             self.executor.waste.add(
-                real_rows=sum(s.real_rows for _, s in occupants),
-                padded_rows=len(lane.slots) * bucket.rows,
-                real_nnz=sum(s.real_nnz for _, s in occupants),
-                padded_nnz=len(lane.slots) * bucket.nnz,
-                bucket=bucket)
-            done = 0
-            for i, s in occupants:
+                real_rows=sum(s.real_rows for _, s in subset),
+                padded_rows=len(lane.slots) * lane.bucket.rows,
+                real_nnz=sum(s.real_nnz for _, s in subset),
+                padded_nnz=len(lane.slots) * lane.bucket.nnz,
+                bucket=lane.bucket)
+        return y, None
+
+    def _complete_slots(self, lane: _Lane, y, subset) -> int:
+        """Resolve finished subset slots from the output ``y``;
+        multi-step members re-feed.  NaN/Inf blocks quarantine."""
+        t_done = time.perf_counter()
+        bucket = lane.bucket
+        done = 0
+        with self._lock:
+            for i, s in subset:
+                if lane.slots[i] is not s:
+                    continue  # already resolved by an earlier probe
                 lo = i * bucket.rows
                 block = y[lo:lo + bucket.rows]
+                if self.cfg.guard_nonfinite and \
+                        not bool(jnp.isfinite(block).all()):
+                    lane.slots[i] = None
+                    done += self._quarantine(s, NaNOutputError(
+                        "non-finite output block quarantined "
+                        f"(request rows={s.rows_logical})"), kind="nan")
+                    continue
                 s.remaining -= 1
                 if s.remaining <= 0:
-                    self.completed += 1
-                    self.executor.requests += 1
                     done += 1
                     lane.slots[i] = None
+                    self.executor.requests += 1
                     lat_ms = (t_done - s.t_submit) * 1e3
                     self._latencies_ms.append(lat_ms)
                     obs.histogram("serve_latency_ms",
                                   engine="continuous").observe(lat_ms)
-                    if not s.future.cancelled():
+                    self.completed += 1
+                    if not s.future.done() and not s.future.cancelled():
                         s.future.set_result(
                             np.asarray(block[:s.rows_logical]))
                     continue
                 if block.shape != s.features.shape:
-                    self.completed += 1
-                    self.failed += 1
                     done += 1
                     lane.slots[i] = None
-                    if not s.future.cancelled():
+                    self.completed += 1
+                    self.failed += 1
+                    if not s.future.done() and not s.future.cancelled():
                         s.future.set_exception(ValueError(
                             f"multi-step request: step output {block.shape}"
                             f" cannot re-feed features {s.features.shape}"
                             " (d_out must equal d)"))
                     continue
                 s.features = block
-            lane.recycle()
         return done
 
-    def _fail_lane(self, lane: _Lane, occupants, exc: Exception) -> int:
+    # -- recovery -----------------------------------------------------------
+
+    def _recover(self, lane: _Lane, subset, exc, *,
+                 retried: bool = False) -> int:
+        """A subset execution failed: retry, bisect, quarantine.
+
+        Transient faults get one same-set retry (backoff + budget),
+        then the subset bisects — successful halves complete from the
+        probe, the failing singleton is quarantined as poison (or, if
+        its failures were transient, failed with a structured
+        retries-exhausted error).  A form that trips the degradation
+        threshold rebuilds the whole lane on the surviving form.
+        """
+        kind = classify(exc)
+        if kind == FATAL:
+            return self._fail_slots(lane, subset, exc)
+        if kind == TRANSIENT and \
+                self.executor.note_failure(lane.bucket, lane.d, lane.form):
+            self._rebuild_lane(lane)
+            return 0
+        if len(subset) == 1:
+            return self._recover_single(lane, subset, exc, kind)
+        if kind == TRANSIENT and not retried and self._budget.spend():
+            obs.counter("resilience_retries_total",
+                        site="continuous.execute", kind=kind).inc()
+            time.sleep(self.cfg.retry.backoff_s(2, self._rng))
+            y, exc2 = self._try_execute(lane, subset)
+            if exc2 is None:
+                return self._complete_slots(lane, y, subset)
+            exc, kind = exc2, classify(exc2)
+            if kind == FATAL:
+                return self._fail_slots(lane, subset, exc)
+        # bisect: innocents complete from their half's probe, the
+        # culprit's half recurses down to a singleton
+        mid = len(subset) // 2
+        done = 0
+        for half in (subset[:mid], subset[mid:]):
+            y, exc_h = self._try_execute(lane, half)
+            if exc_h is None:
+                done += self._complete_slots(lane, y, half)
+            else:
+                done += self._recover(lane, half, exc_h, retried=True)
+        return done
+
+    def _recover_single(self, lane: _Lane, subset, exc, kind: str) -> int:
+        (_, s) = subset[0]
+        if kind == POISON:
+            with self._lock:
+                i = subset[0][0]
+                if lane.slots[i] is s:
+                    lane.slots[i] = None
+            return self._quarantine(s, exc, kind="poison")
+        s.attempts += 1
+        if self.cfg.retry.allows(s.attempts + 1) and self._budget.spend():
+            obs.counter("resilience_retries_total",
+                        site="continuous.execute", kind=kind).inc()
+            time.sleep(self.cfg.retry.backoff_s(s.attempts + 1, self._rng))
+            y, exc2 = self._try_execute(lane, subset)
+            if exc2 is None:
+                return self._complete_slots(lane, y, subset)
+            return self._recover(lane, subset, exc2, retried=True)
+        return self._fail_slots(lane, subset, TransientExecutorError(
+            f"retries exhausted after {s.attempts} attempts "
+            f"(last error: {exc!r})"))
+
+    def _quarantine(self, s: _SlotReq, exc, *, kind: str) -> int:
+        """Fail one request as the pinned culprit (slot already freed).
+        The original exception is preserved — chaos poison already
+        raises PoisonRequestError, and a caller's ValueError stays a
+        ValueError."""
+        self.quarantined += 1
+        obs.counter("resilience_quarantined_total", kind=kind).inc()
+        self._finish_error(s, exc)
+        return 1
+
+    def _fail_slots(self, lane: _Lane, subset, exc) -> int:
         with self._lock:
-            for i, s in occupants:
-                self.completed += 1
-                self.failed += 1
-                lane.slots[i] = None
-                if not s.future.cancelled():
-                    s.future.set_exception(exc)
-            lane.recycle()
-        return len(occupants)
+            for i, s in subset:
+                if lane.slots[i] is s:
+                    lane.slots[i] = None
+        for _, s in subset:
+            self._finish_error(s, exc)
+        return len(subset)
+
+    def _finish_error(self, s: _SlotReq, exc) -> None:
+        with self._lock:
+            self.completed += 1
+            self.failed += 1
+        if not s.future.done() and not s.future.cancelled():
+            s.future.set_exception(exc)
+
+    def _rebuild_lane(self, lane: _Lane) -> None:
+        """The lane's form was degraded: re-admit every occupant and
+        queued request through a fresh lane on the surviving form.
+        Partially-run multi-step requests restart from their source
+        features (deterministic executors make the redo exact)."""
+        key = (lane.bucket, lane.d)
+        with self._lock:
+            reqs = [s for s in lane.slots if s is not None] \
+                + list(lane.queue)
+            lane.slots = [None] * len(lane.slots)
+            lane.queue.clear()
+            if self._lanes.get(key) is lane:
+                del self._lanes[key]
+        obs.counter("resilience_recoveries_total",
+                    site="lane_rebuild").inc()
+        for s in reqs:
+            try:
+                with self._lock:
+                    nlane = self._lane_for(s.source,
+                                           int(s.source_h.shape[1]),
+                                           s.source_h.dtype)
+                    src = s.source if s.source.has_form(nlane.form) \
+                        else s.source.to(nlane.form)
+                    s.matrix = pad_to_bucket(src, nlane.bucket,
+                                             form=nlane.form)
+                    s.features = paths.pad_rows(
+                        s.source_h.astype(nlane.dtype), nlane.bucket.cols)
+                    s.remaining = s.steps_total
+                    if not nlane.admit(s):
+                        self._shed_for(nlane, s)
+            except Exception as exc:  # noqa: BLE001 — resolve, don't strand
+                self._finish_error(s, exc)
 
     def _step_loop(self) -> None:
         while not self._stop.is_set():
+            try:
+                chaos.hook("continuous.worker")
+            except chaos.WorkerKilled:
+                return  # injected death: the supervisor restarts us
             if self.step() == 0:
                 # nothing ready (idle, or occupants still inside their
                 # batching window) — back off briefly
@@ -395,14 +666,16 @@ class ContinuousBatchEngine:
 
     def drain(self, timeout: float = 60.0) -> None:
         """Step (or wait on the background thread) until every admitted
-        request has resolved."""
+        request has resolved.  A dead background worker is restarted
+        (bounded); past the restart budget the drain degrades to
+        stepping inline, so the backlog still completes."""
         t0 = time.perf_counter()
         while self.pending() > 0:
             if time.perf_counter() - t0 > timeout:
                 raise TimeoutError(
                     f"drain: {self.pending()} requests still pending "
                     f"after {timeout}s")
-            if self._worker is None:
+            if self._sup is None or not self._sup.ensure():
                 self.step(force=True)
             else:
                 time.sleep(0.002)
@@ -416,20 +689,17 @@ class ContinuousBatchEngine:
         except Exception:  # noqa: BLE001 — still fail the leftovers below
             pass
         self._stop.set()
-        if self._worker is not None:
-            self._worker.join(timeout=5.0)
+        if self._sup is not None:
+            self._sup.join(timeout=5.0)
         with self._lock:
+            leftovers = []
             for lane in self._lanes.values():
-                leftovers = ([s for s in lane.slots if s is not None]
-                             + list(lane.queue))
+                leftovers += ([s for s in lane.slots if s is not None]
+                              + list(lane.queue))
                 lane.slots = [None] * len(lane.slots)
                 lane.queue.clear()
-                for s in leftovers:
-                    self.completed += 1
-                    self.failed += 1
-                    if not s.future.cancelled():
-                        s.future.set_exception(
-                            RuntimeError("engine closed"))
+        for s in leftovers:
+            self._finish_error(s, EngineClosedError("engine closed"))
 
     def __enter__(self) -> "ContinuousBatchEngine":
         return self
@@ -445,6 +715,7 @@ class ContinuousBatchEngine:
         with self._lock:
             self._latencies_ms.clear()
             self.submitted = self.completed = self.failed = 0
+            self.quarantined = self.shed = 0
             for lane in self._lanes.values():
                 lane.steps = lane.slot_steps = lane.occupied_steps = 0
             self.executor.waste = type(self.executor.waste)()
@@ -479,4 +750,11 @@ class ContinuousBatchEngine:
                            if len(lat) else 0.0),
                 "lanes": lanes,
                 "executor": self.executor.report(),
+                "resilience": {
+                    "quarantined": self.quarantined,
+                    "shed": self.shed,
+                    "retry_tokens": self._budget.remaining(),
+                    "worker_restarts": (self._sup.restarts
+                                        if self._sup is not None else 0),
+                },
             }, {"latency_ms_p50": "p50_ms", "latency_ms_p99": "p99_ms"})

@@ -48,6 +48,7 @@ import numpy as np
 
 from repro import obs
 from repro.core.formats import SellCS
+from repro.resilience import chaos
 from repro.dispatch.stats import MatrixStats
 from repro.sparse.matrix import SparseMatrix
 
@@ -284,6 +285,7 @@ class DeltaGraph:
         self.width_slack = int(width_slack)
         self._sell_cfg = dict(c=c, sigma=sigma, block=block)
         self.repacks = 0
+        self.repack_failures = 0
         self.deltas_applied = 0
         self.stats_invalidations = 0
         self._lock = threading.RLock()
@@ -427,7 +429,14 @@ class DeltaGraph:
             self._journal = []
 
             def build():
-                self._pending_swap = self._make_overlay(snapshot)
+                try:
+                    chaos.hook("delta.repack")
+                    self._pending_swap = self._make_overlay(snapshot)
+                except Exception:  # noqa: BLE001 — crash-safe swap: a
+                    # failed build publishes nothing; the live overlay
+                    # never stopped serving (poll_repack sees swap=None)
+                    self.repack_failures += 1
+                    obs.counter("graph_repack_failures_total").inc()
 
             self._bg = threading.Thread(target=build, daemon=True)
             self._bg.start()
@@ -446,6 +455,11 @@ class DeltaGraph:
             journal, self._journal = self._journal, None
             self._pending_swap = None
             if new is None:
+                # the build crashed: nothing was published, the old
+                # overlay kept serving throughout — recovery is "do
+                # nothing", which is the point of the swap protocol
+                obs.counter("resilience_recoveries_total",
+                            site="delta.repack").inc()
                 return False
             old = self._overlay
             self._overlay = new
@@ -484,6 +498,7 @@ class DeltaGraph:
                 "free_slots": self.free_slots(),
                 "deltas_applied": self.deltas_applied,
                 "repacks": self.repacks,
+                "repack_failures": self.repack_failures,
                 "stats_invalidations": self.stats_invalidations,
                 "background_repack_running": self._bg is not None,
             }

@@ -7,10 +7,13 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import obs
 from repro.configs.base import ModelConfig
 from repro.models.transformer import lm_loss
+from repro.resilience import chaos
+from repro.resilience.errors import FATAL, classify
 from repro.train.grad_compress import (compress_int8, compress_topk_ef,
                                        init_residual)
 from repro.train.optimizer import OptConfig, adamw_update, init_opt_state
@@ -101,21 +104,64 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
 
 def train_loop(params, state, train_step, data_iter, n_steps: int, *,
                log_every: int = 10, checkpointer=None, ckpt_every: int = 0,
-               health=None, callback=None) -> Dict[str, Any]:
-    """Host-side loop: timing, straggler detection, periodic checkpoints."""
+               health=None, callback=None, data_factory=None,
+               max_recoveries: int = 0) -> Dict[str, Any]:
+    """Host-side loop: timing, straggler detection, periodic checkpoints.
+
+    Crash recovery (see DESIGN.md "Resilience"): with a ``checkpointer``,
+    ``data_factory`` and ``max_recoveries > 0``, an exception escaping a
+    step restores params/state from the newest intact checkpoint, rewinds
+    the data stream with ``data_factory(restored_step)`` (a fresh
+    iterator positioned at that step), and replays — deterministic data
+    plus a deterministic step function reconverge to the same final
+    loss.  With no checkpoint published yet, recovery restarts from the
+    *initial* params/state (step 0).  Each recovery counts in
+    ``resilience_recoveries_total{site="train"}``; the total is returned
+    under ``"recoveries"``.
+    """
+    can_recover = (checkpointer is not None and data_factory is not None
+                   and max_recoveries > 0)
+    if can_recover:
+        # keep the step-0 state restorable before the first checkpoint
+        # (donation would otherwise invalidate these buffers)
+        init_snapshot = jax.tree_util.tree_map(np.asarray, (params, state))
     history = []
+    recoveries = 0
     step_fn = jax.jit(train_step, donate_argnums=(0, 1))
-    for step in range(n_steps):
-        batch = next(data_iter)
-        t0 = time.perf_counter()
-        with obs.span("train.step", step=step):
-            params, state, metrics = step_fn(params, state, batch)
-            loss = float(metrics["loss"])  # blocks; keeps timing honest
+    step = 0
+    while step < n_steps:
+        try:
+            chaos.hook("train.step", step=step)
+            batch = next(data_iter)
+            t0 = time.perf_counter()
+            with obs.span("train.step", step=step):
+                params, state, metrics = step_fn(params, state, batch)
+                loss = float(metrics["loss"])  # blocks; keeps timing honest
+        except Exception as exc:  # noqa: BLE001 — classified below
+            if not can_recover or recoveries >= max_recoveries \
+                    or classify(exc) == FATAL:
+                raise
+            recoveries += 1
+            obs.counter("resilience_recoveries_total", site="train").inc()
+            checkpointer.wait()  # let any in-flight save publish
+            restored = checkpointer.latest_step()
+            if restored is None:
+                restored = 0
+                params, state = jax.tree_util.tree_map(
+                    jnp.asarray, init_snapshot)
+            else:
+                tree = checkpointer.restore(
+                    {"params": params, "state": state})
+                params, state = tree["params"], tree["state"]
+            data_iter = data_factory(restored)
+            history = [h for h in history if h["step"] < restored]
+            step = restored
+            continue
         dt = time.perf_counter() - t0
         obs.histogram("train_step_ms").observe(dt * 1e3)
         obs.gauge("train_loss").set(loss)
-        if health is not None:
-            health.record(step, dt)
+        if health is not None and health.record(step, dt):
+            obs.counter("train_stragglers_total").inc()
         if step % log_every == 0:
             history.append({"step": step, "loss": loss, "time_s": dt})
         if checkpointer is not None and ckpt_every and \
@@ -123,4 +169,6 @@ def train_loop(params, state, train_step, data_iter, n_steps: int, *,
             checkpointer.save(step + 1, {"params": params, "state": state})
         if callback is not None:
             callback(step, params, state, metrics)
-    return {"params": params, "state": state, "history": history}
+        step += 1
+    return {"params": params, "state": state, "history": history,
+            "recoveries": recoveries}

@@ -1,9 +1,16 @@
-"""Property test: checkpoint round-trips arbitrary nested pytrees."""
+"""Property tests: checkpoint round-trips arbitrary nested pytrees, and
+restore survives arbitrarily corrupted step directories (crash-mid-write
+fuzzing) by falling back to the newest intact step."""
+import json
+import os
+
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypothesis_compat import given, settings, st
 
 from repro.ft.checkpoint import Checkpointer
+from repro.resilience import FaultPlan, FaultSpec, chaos
 
 _dtypes = st.sampled_from([np.float32, np.int32, np.float16, np.bool_])
 
@@ -43,3 +50,123 @@ def test_checkpoint_roundtrip_arbitrary_tree(tmp_path_factory, t):
     for a, b in zip(jax.tree_util.tree_leaves(t),
                     jax.tree_util.tree_leaves(out)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# crash-mid-write + corrupt-directory fuzzing (resilience satellite)
+# ---------------------------------------------------------------------------
+
+_TREE = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+         "nested": {"b": jnp.ones((5,), jnp.float32)}}
+
+
+def _step_dir(ck, step):
+    return os.path.join(ck.directory, f"step_{step:08d}")
+
+
+def _corrupt(ck, step, how):
+    d = _step_dir(ck, step)
+    if how == "truncated_metadata":
+        with open(os.path.join(d, "metadata.json"), "w") as f:
+            f.write('{"step":')  # cut mid-object
+    elif how == "partial_npy":
+        name = next(n for n in os.listdir(d) if n.endswith(".npy"))
+        with open(os.path.join(d, name), "wb") as f:
+            f.write(b"\x93NUMPY")  # header cut short
+    elif how == "missing_leaf":
+        name = next(n for n in os.listdir(d) if n.endswith(".npy"))
+        os.remove(os.path.join(d, name))
+    elif how == "shape_drift":
+        name = next(n for n in os.listdir(d) if n.endswith(".npy"))
+        np.save(os.path.join(d, name), np.zeros((2, 2), np.float32))
+    else:
+        raise AssertionError(how)
+
+
+def test_crash_mid_write_keeps_previous_step(tmp_path):
+    """A chaos crash between the temp write and the atomic rename loses
+    only the in-flight save; the previous step keeps serving restores
+    and no temp litter is published as a step."""
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, _TREE)
+    plan = FaultPlan([FaultSpec(site="checkpoint.write", kind="raise",
+                                at=1, times=1)])
+    with chaos.active(plan):
+        with pytest.raises(RuntimeError):
+            ck.save(2, _TREE)
+    assert ck.all_steps() == [1]
+    out = ck.restore(_TREE)
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.asarray(_TREE["w"]))
+    # the crashed save left no temp directory behind
+    assert not [n for n in os.listdir(str(tmp_path))
+                if n.startswith(".tmp_")]
+
+
+def test_async_crash_mid_write_is_recorded_not_silent(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=True)
+    ck.save(1, _TREE)
+    ck.wait()
+    plan = FaultPlan([FaultSpec(site="checkpoint.write", kind="raise",
+                                at=1, times=1)])
+    with chaos.active(plan):
+        ck.save(2, _TREE)
+        ck.wait()
+    assert ck.failed_saves == 1
+    assert ck.last_error is not None
+    assert ck.all_steps() == [1]
+
+
+@pytest.mark.parametrize("how", ["truncated_metadata", "partial_npy",
+                                 "missing_leaf", "shape_drift"])
+def test_restore_skips_corrupt_newest_step(tmp_path, how):
+    ck = Checkpointer(str(tmp_path), keep=3, async_save=False)
+    tree1 = {"w": jnp.full((3, 4), 1.0), "nested": {"b": jnp.ones((5,))}}
+    tree2 = {"w": jnp.full((3, 4), 2.0), "nested": {"b": jnp.ones((5,))}}
+    ck.save(1, tree1)
+    ck.save(2, tree2)
+    _corrupt(ck, 2, how)
+    out = ck.restore(_TREE)  # newest (2) is corrupt: falls back to 1
+    np.testing.assert_array_equal(np.asarray(out["w"]),
+                                  np.full((3, 4), 1.0, np.float32))
+    # an explicit step= request still surfaces the corruption
+    with pytest.raises(Exception):
+        ck.restore(_TREE, step=2)
+
+
+def test_restore_all_corrupt_raises_structured(tmp_path):
+    ck = Checkpointer(str(tmp_path), async_save=False)
+    ck.save(1, _TREE)
+    ck.save(2, _TREE)
+    _corrupt(ck, 1, "partial_npy")
+    _corrupt(ck, 2, "truncated_metadata")
+    with pytest.raises(FileNotFoundError, match="no intact checkpoint"):
+        ck.restore(_TREE)
+
+
+@settings(max_examples=10, deadline=None)
+@given(plan=st.lists(
+    st.tuples(st.integers(1, 4),  # step to corrupt
+              st.sampled_from(["truncated_metadata", "partial_npy",
+                               "missing_leaf", "shape_drift"])),
+    min_size=0, max_size=3, unique_by=lambda t: t[0]))
+def test_restore_fuzz_falls_back_to_newest_intact(tmp_path_factory, plan):
+    """Whatever subset of steps a fuzzer corrupts, restore returns the
+    newest *intact* step's values (or raises when none survive)."""
+    d = tmp_path_factory.mktemp("ckfuzz")
+    ck = Checkpointer(str(d), keep=4, async_save=False)
+    for s in (1, 2, 3, 4):
+        ck.save(s, {"w": jnp.full((3, 4), float(s)),
+                    "nested": {"b": jnp.ones((5,))}})
+    corrupted = {s for s, _ in plan}
+    for s, how in plan:
+        _corrupt(ck, s, how)
+    intact = [s for s in (1, 2, 3, 4) if s not in corrupted]
+    if not intact:
+        with pytest.raises(FileNotFoundError):
+            ck.restore(_TREE)
+        return
+    out = ck.restore(_TREE)
+    np.testing.assert_array_equal(
+        np.asarray(out["w"]),
+        np.full((3, 4), float(max(intact)), np.float32))
