@@ -1,0 +1,157 @@
+"""Fleet serving under failover: throughput and tail latency across
+fleet sizes, with a worker killed mid-run.
+
+Drives a drifting request mix (small → large → mixed sizes) through a
+:class:`~repro.serve.fleet.ServingFleet` at 1, 2 and 4 workers.  At the
+half-way mark one live worker is hard-killed; the run records
+
+  * wall-clock throughput over the whole storm,
+  * p99 latency **before** the kill, **during** the failover window,
+    and **after** recovery (the during/after split is what the
+    supervisor's respawn + warm-lane pre-compile is supposed to keep
+    flat),
+  * ``requests_lost`` — which must be **0**: the router journal
+    re-routes the dead worker's in-flight to survivors (or parks it
+    until the respawn) and every future resolves with a result.
+
+Results land in ``BENCH_fleet.json`` (committed; refreshed as a CI
+artifact by the bench-smoke job and gated by
+``benchmarks/regression_check.py --fleet-*``).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from benchmarks.common import emit
+
+JSON_PATH = "BENCH_fleet.json"
+
+
+def _workload(quick: bool) -> List[Tuple[np.ndarray, np.ndarray]]:
+    """Drifting mix: phase A small, phase B large, phase C both."""
+    rng = np.random.default_rng(11)
+    per_phase = 40 if quick else 120
+    d = 8
+    phases = [(24, 48), (96, 160 if quick else 256), (24, 160 if quick else 256)]
+    reqs = []
+    for lo, hi in phases:
+        sizes = [int(s) for s in rng.integers(lo, hi, size=4)]
+        for _ in range(per_phase):
+            n = sizes[int(rng.integers(len(sizes)))]
+            dense = (rng.random((n, n)) < 0.1).astype(np.float32)
+            h = rng.standard_normal((n, d)).astype(np.float32)
+            reqs.append((dense, h))
+    return reqs
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+def _drive(requests, *, workers: int, backend: str, kill: bool) -> Dict:
+    from repro.serve.fleet import FleetConfig, ServingFleet
+
+    fleet = ServingFleet(FleetConfig(
+        backend=backend, workers=workers, hedge_after_ms=10_000.0,
+        max_restarts_per_worker=2))
+    try:
+        if not fleet.wait_live(workers, timeout=300.0):
+            raise RuntimeError(f"fleet of {workers} did not come up")
+        # warm every phase's lanes so the storm measures serving, not
+        # first compiles
+        seen = set()
+        for dense, h in requests:
+            key = (len(dense), h.shape[1])
+            if key not in seen:
+                seen.add(key)
+                fleet.infer(dense, h, timeout=300.0)
+
+        kill_at = len(requests) // 2
+        futs, t_sub = [], []
+        killed_t: Optional[float] = None
+        t0 = time.perf_counter()
+        for i, (dense, h) in enumerate(requests):
+            if kill and i == kill_at:
+                victims = fleet.sup.live()
+                if victims:
+                    killed_t = time.perf_counter()
+                    fleet._kill_worker(victims[0])
+            t_sub.append(time.perf_counter())
+            futs.append(fleet.submit(dense, h))
+        lat: List[Optional[float]] = []
+        for f, ts in zip(futs, t_sub):
+            f.result(timeout=600.0)
+            lat.append((time.perf_counter() - ts) * 1e3)
+        elapsed = time.perf_counter() - t0
+        rep = fleet.report()
+
+        # segment latencies by submit epoch relative to the kill: the
+        # failover window is the 2s after the kill fired
+        before, during, after = [], [], []
+        for ts, ms in zip(t_sub, lat):
+            if killed_t is None or ts < killed_t:
+                before.append(ms)
+            elif ts < killed_t + 2.0:
+                during.append(ms)
+            else:
+                after.append(ms)
+        return {
+            "workers": workers,
+            "backend": backend,
+            "n_requests": len(requests),
+            "req_per_s": len(requests) / elapsed,
+            "p50_ms": _percentile(lat, 50),
+            "p99_ms": _percentile(lat, 99),
+            "p99_before_ms": _percentile(before, 99),
+            "p99_during_failover_ms": _percentile(during, 99),
+            "p99_after_ms": _percentile(after, 99),
+            "requests_lost": rep["fleet"]["requests_lost"],
+            "completed": rep["completed"],
+            "failed": rep["failed"],
+            "worker_states": {k: v["status"]
+                              for k, v in rep["workers"].items()},
+        }
+    finally:
+        fleet.close()
+
+
+def run(quick: bool = True, backend: str = "thread",
+        json_path: Optional[str] = JSON_PATH) -> Dict:
+    requests = _workload(quick)
+    results: Dict[str, object] = {"n_requests": len(requests),
+                                  "backend": backend}
+    for workers in (1, 2, 4):
+        rep = _drive(requests, workers=workers, backend=backend,
+                     kill=True)
+        assert rep["requests_lost"] == 0, (
+            f"fleet of {workers} lost {rep['requests_lost']} requests "
+            f"across a mid-run worker kill")
+        results[f"fleet_{workers}w"] = rep
+        emit(f"serve_fleet_{workers}w",
+             1e6 / max(rep["req_per_s"], 1e-9),
+             f"req_per_s={rep['req_per_s']:.1f};"
+             f"p99_before={rep['p99_before_ms']:.1f};"
+             f"p99_during={rep['p99_during_failover_ms']:.1f};"
+             f"p99_after={rep['p99_after_ms']:.1f};"
+             f"lost={rep['requests_lost']}")
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
+            f.write("\n")
+    return results
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="thread",
+                    choices=("thread", "process"))
+    ap.add_argument("--json", default=JSON_PATH)
+    args = ap.parse_args()
+    run(quick=args.quick, backend=args.backend, json_path=args.json)

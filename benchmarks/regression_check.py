@@ -12,13 +12,22 @@ job only on regressions that can't be CPU-runner noise:
   in the steady state is a correctness bug in the bucketing/ladder
   carryover, never noise.
 
+The fleet baseline (``BENCH_fleet.json``) adds two gates of its own:
+
+* ``requests_lost`` in **any** fleet size of the current run must be 0 —
+  a lost request means the router journal failed at-most-once failover,
+  which is a correctness bug regardless of runner speed;
+* each fleet size's ``req_per_s`` may not drop below 1/tolerance of its
+  baseline.
+
 Rows present on only one side are reported as informational skips, not
 failures: benches gain and lose rows as the suite evolves, and a rename
 must not wedge CI.  Keys are read tolerantly (``p50_ms`` or the older
 ``latency_ms_p50``) so the gate can compare across the rename boundary.
 
 ``python -m benchmarks.regression_check --kernels-baseline ... --kernels-current
-... --serve-baseline ... --serve-current ...`` exits 1 on any failure.
+... --serve-baseline ... --serve-current ... --fleet-baseline ...
+--fleet-current ...`` exits 1 on any failure.
 """
 from __future__ import annotations
 
@@ -100,6 +109,41 @@ def check_serve(current: Dict, baseline: Dict, *,
     return failures, notes
 
 
+def check_fleet(current: Dict, baseline: Dict, *,
+                tolerance: float = DEFAULT_TOLERANCE
+                ) -> Tuple[List[str], List[str]]:
+    """(failures, notes) for the fleet failover bench.
+
+    ``requests_lost`` must be 0 in every fleet size of the current run
+    (hard correctness gate — the journal guarantees at-most-once
+    completion even across a mid-run worker kill); throughput per fleet
+    size may drop to 1/tolerance of baseline.
+    """
+    failures, notes = [], []
+    sizes = [k for k, v in current.items() if isinstance(v, dict)
+             and "requests_lost" in v]
+    for name in sorted(sizes):
+        lost = current[name].get("requests_lost", 0)
+        if lost:
+            failures.append(
+                f"fleet {name}: {lost} request(s) lost across the "
+                "mid-run worker kill (journal failover broke; not noise)")
+    base_sizes = [k for k, v in baseline.items() if isinstance(v, dict)
+                  and "req_per_s" in v]
+    for name in sorted(base_sizes):
+        if name not in current or not isinstance(current[name], dict):
+            notes.append(f"fleet size {name!r} missing from current run; "
+                         "skipped")
+            continue
+        bt = baseline[name].get("req_per_s")
+        ct = current[name].get("req_per_s")
+        if bt and ct and ct < bt / tolerance:
+            failures.append(
+                f"fleet {name}: {ct:.1f} req/s vs baseline {bt:.1f} "
+                f"({bt / ct:.2f}x slower > {tolerance:.1f}x tolerance)")
+    return failures, notes
+
+
 def _load(path: Optional[str]) -> Optional[Dict]:
     if not path:
         return None
@@ -116,6 +160,8 @@ def main(argv: Optional[List[str]] = None) -> int:
     ap.add_argument("--kernels-current", default=None, metavar="PATH")
     ap.add_argument("--serve-baseline", default=None, metavar="PATH")
     ap.add_argument("--serve-current", default=None, metavar="PATH")
+    ap.add_argument("--fleet-baseline", default=None, metavar="PATH")
+    ap.add_argument("--fleet-current", default=None, metavar="PATH")
     ap.add_argument("--tolerance", type=float, default=DEFAULT_TOLERANCE)
     args = ap.parse_args(argv)
 
@@ -125,7 +171,9 @@ def main(argv: Optional[List[str]] = None) -> int:
             ("kernels", args.kernels_baseline, args.kernels_current,
              check_kernels),
             ("serve", args.serve_baseline, args.serve_current,
-             check_serve)):
+             check_serve),
+            ("fleet", args.fleet_baseline, args.fleet_current,
+             check_fleet)):
         base, cur = _load(base_path), _load(cur_path)
         if base is None or cur is None:
             notes.append(f"{label}: baseline or current JSON missing "

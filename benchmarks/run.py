@@ -16,6 +16,9 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_corpus       — structured-matrix corpus (uniform/powerlaw/rmat/
                        banded/block_pruned) over every execution path +
                        the SpMV lane (also writes BENCH_corpus.json)
+  bench_serve_fleet  — multi-worker fleet with a mid-run worker kill:
+                       throughput + p99 before/during/after failover,
+                       requests-lost must be 0 (writes BENCH_fleet.json)
 
 ``python -m benchmarks.run [--full] [--policy auto] [--json out.json]``
 (quick mode by default so the CPU container finishes in minutes; --full
@@ -63,7 +66,8 @@ def main() -> None:
 
     from benchmarks import (bench_corpus, bench_crossover,
                             bench_dense_limit, bench_footprint, bench_fused,
-                            bench_sddmm, bench_serve, bench_spmm, common)
+                            bench_sddmm, bench_serve, bench_serve_fleet,
+                            bench_spmm, common)
     from repro.sparse import plan_cache_stats, reset_plan_cache_stats
     benches = {
         "dense_limit": bench_dense_limit.run,
@@ -74,6 +78,7 @@ def main() -> None:
         "serve": bench_serve.run,
         "fused": bench_fused.run,
         "corpus": bench_corpus.run,
+        "fleet": bench_serve_fleet.run,
     }
     dispatched = {"spmm", "sddmm", "crossover", "serve", "fused", "corpus"}
     api_axis = {"spmm", "sddmm"}

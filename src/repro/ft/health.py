@@ -12,7 +12,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass
@@ -24,11 +24,19 @@ class HealthConfig:
 
 
 class StragglerDetector:
-    """Per-step wall-time ring buffer with robust outlier detection."""
+    """Per-step wall-time ring buffer with robust outlier detection.
 
-    def __init__(self, cfg: HealthConfig = HealthConfig()):
-        self.cfg = cfg
-        self.times: Deque[float] = collections.deque(maxlen=cfg.window)
+    ``cfg=None`` builds a private :class:`HealthConfig` — a shared
+    module-level default instance would alias mutable config state
+    across every detector in the process (the classic
+    mutable-dataclass-default bug: tuning one detector's thresholds
+    silently retunes all of them).
+    """
+
+    def __init__(self, cfg: Optional[HealthConfig] = None):
+        self.cfg = cfg if cfg is not None else HealthConfig()
+        self.times: Deque[float] = collections.deque(
+            maxlen=self.cfg.window)
         self.flags: List[int] = []
 
     def record(self, step: int, dt: float) -> bool:
@@ -58,14 +66,19 @@ class StragglerDetector:
 class Heartbeat:
     """Host-level liveness: worker marks, coordinator checks."""
 
-    def __init__(self, cfg: HealthConfig = HealthConfig()):
-        self.cfg = cfg
-        self.last: Dict[int, float] = {}
+    def __init__(self, cfg: Optional[HealthConfig] = None):
+        self.cfg = cfg if cfg is not None else HealthConfig()
+        # keyed by host id — an int rank or a fleet worker name
+        self.last: Dict[Any, float] = {}
 
-    def beat(self, host: int, now: Optional[float] = None):
+    def beat(self, host: Any, now: Optional[float] = None):
         self.last[host] = now if now is not None else time.monotonic()
 
-    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+    def forget(self, host: Any) -> None:
+        """Drop a retired host so it can never read as dead."""
+        self.last.pop(host, None)
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[Any]:
         now = now if now is not None else time.monotonic()
         return [h for h, t in self.last.items()
                 if now - t > self.cfg.heartbeat_timeout_s]

@@ -23,19 +23,23 @@ Recovery actions are visible in ``obs.snapshot()`` via
 ``chaos_faults_total{site,kind}``.
 """
 from repro.resilience import chaos
-from repro.resilience.chaos import FaultPlan, FaultSpec, WorkerKilled
+from repro.resilience.chaos import (FaultPlan, FaultSpec,
+                                    ProcessKillRequested,
+                                    WorkerHangRequested, WorkerKilled)
 from repro.resilience.errors import (DeadlineExceededError,
                                      EngineClosedError, NaNOutputError,
                                      PoisonRequestError, RequestShedError,
                                      ResilienceError,
-                                     TransientExecutorError, classify)
+                                     TransientExecutorError, WorkerLostError,
+                                     classify)
 from repro.resilience.retry import RetryBudget, RetryPolicy, call_with_retry
 from repro.resilience.supervisor import WorkerSupervisor
 
 __all__ = [
     "DeadlineExceededError", "EngineClosedError", "FaultPlan", "FaultSpec",
-    "NaNOutputError", "PoisonRequestError", "RequestShedError",
-    "ResilienceError", "RetryBudget", "RetryPolicy", "TransientExecutorError",
-    "WorkerKilled", "WorkerSupervisor", "call_with_retry", "chaos",
+    "NaNOutputError", "PoisonRequestError", "ProcessKillRequested",
+    "RequestShedError", "ResilienceError", "RetryBudget", "RetryPolicy",
+    "TransientExecutorError", "WorkerHangRequested", "WorkerKilled",
+    "WorkerLostError", "WorkerSupervisor", "call_with_retry", "chaos",
     "classify",
 ]

@@ -19,6 +19,11 @@ site                      where it fires
 ``train.step``            before each training step (ctx carries ``step``)
 ``checkpoint.write``      between the temp-dir write and the atomic rename
 ``delta.repack``          inside the background repack build
+``fleet.worker``          fleet dispatch / monitor tick (ctx: ``worker``,
+                          ``phase``) — ``kill_proc``/``hang`` act here
+``fleet.heartbeat``       parent-side heartbeat intake (ctx: ``worker``)
+``fleet.rpc``             fleet send/recv boundary (ctx: ``worker``,
+                          ``phase``)
 ========================  ====================================================
 
 Faults trigger on exact hit counts (``at``/``times``) or with a
@@ -51,12 +56,32 @@ POISON = "poison"    # raise PoisonRequestError
 DELAY = "delay"      # sleep payload seconds (latency spike)
 DIE = "die"          # raise WorkerKilled — kills a worker thread
 NAN = "nan"          # corrupt an output array with NaN (corrupt sites)
+KILL_PROC = "kill_proc"  # raise ProcessKillRequested — the fleet layer
+#                          catches it and SIGKILLs the worker process
+HANG = "hang"        # raise WorkerHangRequested — the fleet layer catches
+#                      it and freezes the worker's loop (heartbeats stop)
 
-KINDS = (RAISE, POISON, DELAY, DIE, NAN)
+KINDS = (RAISE, POISON, DELAY, DIE, NAN, KILL_PROC, HANG)
 
 
 class WorkerKilled(TransientExecutorError):
     """Injected worker-thread death (``kind="die"``)."""
+
+
+class ProcessKillRequested(Exception):
+    """Control signal of ``kind="kill_proc"``: the hook site (a
+    ``fleet.*`` site) must hard-kill the worker process it names.  Not
+    an error surface — only the fleet layer catches it."""
+
+
+class WorkerHangRequested(Exception):
+    """Control signal of ``kind="hang"``: the hook site must wedge the
+    worker's loop (payload = seconds, ``None`` = until killed), so its
+    heartbeats stop and the fleet's missed-heartbeat detection fires."""
+
+    def __init__(self, msg: str, payload: Any = None):
+        super().__init__(msg)
+        self.payload = payload
 
 
 @dataclasses.dataclass
@@ -140,6 +165,11 @@ class FaultPlan:
             time.sleep(float(spec.payload) if spec.payload else 0.05)
         elif spec.kind == DIE:
             raise WorkerKilled(f"chaos: worker killed at {site}")
+        elif spec.kind == KILL_PROC:
+            raise ProcessKillRequested(f"chaos: kill_proc at {site}")
+        elif spec.kind == HANG:
+            raise WorkerHangRequested(f"chaos: hang at {site}",
+                                      payload=spec.payload)
         elif spec.kind == POISON:
             raise PoisonRequestError(f"chaos: poison at {site}")
         elif spec.kind == RAISE:
@@ -221,7 +251,8 @@ def corrupt(site: str, value, **ctx):
 
 
 __all__ = [
-    "DELAY", "DIE", "FaultPlan", "FaultSpec", "KINDS", "NAN", "POISON",
-    "RAISE", "WorkerKilled", "active", "active_plan", "corrupt", "hook",
+    "DELAY", "DIE", "FaultPlan", "FaultSpec", "HANG", "KILL_PROC", "KINDS",
+    "NAN", "POISON", "ProcessKillRequested", "RAISE", "WorkerHangRequested",
+    "WorkerKilled", "active", "active_plan", "corrupt", "hook",
     "install", "uninstall",
 ]

@@ -46,6 +46,12 @@ class TransientExecutorError(ResilienceError):
     is retryable (with backoff, up to the retry budget)."""
 
 
+class WorkerLostError(TransientExecutorError):
+    """A fleet worker died with this request in flight and no survivor
+    (or restart) could take it over within the failover budget.  The
+    request itself is innocent — resubmitting it is safe."""
+
+
 class RequestShedError(ResilienceError):
     """Load shedding dropped this request before execution."""
 
@@ -90,5 +96,5 @@ def classify(exc: BaseException) -> str:
 __all__ = [
     "DeadlineExceededError", "EngineClosedError", "FATAL", "NaNOutputError",
     "POISON", "PoisonRequestError", "RequestShedError", "ResilienceError",
-    "TRANSIENT", "TransientExecutorError", "classify",
+    "TRANSIENT", "TransientExecutorError", "WorkerLostError", "classify",
 ]

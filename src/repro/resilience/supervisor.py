@@ -11,6 +11,17 @@ hurts) restarts a dead loop up to ``max_restarts`` times, counting each
 restart in ``resilience_worker_restarts_total{worker}`` and
 ``resilience_recoveries_total{site="worker"}``.  Past the budget the
 engine falls back to its fail-the-backlog behavior.
+
+Concurrency contract: the observe-dead → charge-budget → respawn
+sequence is atomic under one lock, so two threads hitting ``ensure()``
+on the same dead worker can never double-restart or double-charge the
+budget (the second observer sees the already-respawned thread and
+returns).  Each spawn bumps ``generation``; a caller that observed a
+death *before* taking the lock can pass its observed generation and
+becomes a no-op if another thread already handled that death — the
+guard the fleet's process-level supervisor relies on, where a respawn
+is seconds long and must happen outside the lock
+(:class:`repro.serve.fleet.FleetSupervisor`).
 """
 from __future__ import annotations
 
@@ -29,12 +40,15 @@ class WorkerSupervisor:
         self.target = target
         self.max_restarts = int(max_restarts)
         self.restarts = 0
+        self.generation = 0
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
 
     def _spawn(self) -> None:
+        self.generation += 1
         self._thread = threading.Thread(
-            target=self.target, name=self.name, daemon=True)
+            target=self.target, name=f"{self.name}-g{self.generation}",
+            daemon=True)
         self._thread.start()
 
     def start(self) -> None:
@@ -43,16 +57,29 @@ class WorkerSupervisor:
                 self._spawn()
 
     def alive(self) -> bool:
-        t = self._thread
+        with self._lock:
+            t = self._thread
         return t is not None and t.is_alive()
 
-    def ensure(self) -> bool:
+    def ensure(self, observed_generation: Optional[int] = None) -> bool:
         """Restart the worker if it died.  Returns True while a live
         worker exists (possibly just restarted); False once the restart
-        budget is exhausted and the loop is dead."""
+        budget is exhausted and the loop is dead.
+
+        ``observed_generation`` makes a deferred death report safe: a
+        caller that saw generation *g* dead, then raced another caller
+        to this lock, only restarts if the generation is still *g* —
+        otherwise the death was already handled (possibly by a restart
+        that has itself since died, which the next plain ``ensure()``
+        will observe against the *new* generation).
+        """
         with self._lock:
             if self._thread is None:
                 return False  # never started (foreground mode)
+            if observed_generation is not None \
+                    and observed_generation != self.generation:
+                return self._thread.is_alive() \
+                    or self.restarts < self.max_restarts
             if self._thread.is_alive():
                 return True
             if self.restarts >= self.max_restarts:
@@ -65,7 +92,8 @@ class WorkerSupervisor:
             return True
 
     def join(self, timeout: Optional[float] = None) -> None:
-        t = self._thread
+        with self._lock:
+            t = self._thread
         if t is not None:
             t.join(timeout=timeout)
 

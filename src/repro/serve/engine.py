@@ -308,6 +308,7 @@ class BatchServingEngine:
         self._completed = 0
         self._failed = 0
         self._close_lock = threading.Lock()
+        self._close_once = threading.Lock()
         self._stop = threading.Event()
         self._rng = np.random.default_rng(self.scfg.seed)
         self._budget = RetryBudget(self.scfg.retry_budget,
@@ -621,15 +622,20 @@ class BatchServingEngine:
         get their results, not an error.  Only if the drain cannot
         finish (dead worker, timeout) are the leftovers failed; either
         way every future resolves and no caller blocks forever.
+
+        Idempotent and safe under concurrent callers: one closer does
+        the drain/stop/sweep, later (or racing) closers serialize on
+        its lock and find the work done.
         """
-        if not self._stop.is_set():
-            try:
-                self.drain()
-            except Exception:  # noqa: BLE001 — still sweep below
-                pass
-        self._stop.set()
-        self._sup.join(timeout=5.0)
-        self._fail_queued()
+        with self._close_once:
+            if not self._stop.is_set():
+                try:
+                    self.drain()
+                except Exception:  # noqa: BLE001 — still sweep below
+                    pass
+            self._stop.set()
+            self._sup.join(timeout=5.0)
+            self._fail_queued()
 
     def __enter__(self) -> "BatchServingEngine":
         return self

@@ -216,6 +216,8 @@ class ContinuousBatchEngine:
         self.quarantined = 0
         self.shed = 0
         self._stop = threading.Event()
+        self._close_once = threading.Lock()
+        self._closed = False
         self._sup: Optional[WorkerSupervisor] = None
         if self.cfg.background:
             self._sup = WorkerSupervisor(
@@ -297,6 +299,11 @@ class ContinuousBatchEngine:
             self.submitted += 1
             if not lane.admit(req):
                 self._shed_for(lane, req)
+        if self._stop.is_set():
+            # close() may have swept the lanes between our top-of-submit
+            # check and the admit above; sweep again so this request
+            # cannot strand in a lane nothing will ever step
+            self._fail_leftovers()
         return fut
 
     def _lane_for(self, adj, d: int, dtype) -> _Lane:
@@ -680,17 +687,9 @@ class ContinuousBatchEngine:
             else:
                 time.sleep(0.002)
 
-    def close(self) -> None:
-        """Drain in-flight work, then stop.  Every future submitted
-        before close resolves — with its result when the drain
-        succeeds, with an error otherwise; none is left hanging."""
-        try:
-            self.drain()
-        except Exception:  # noqa: BLE001 — still fail the leftovers below
-            pass
-        self._stop.set()
-        if self._sup is not None:
-            self._sup.join(timeout=5.0)
+    def _fail_leftovers(self) -> None:
+        """Sweep every occupied slot and queued request into
+        EngineClosedError (close path, and the submit-vs-close race)."""
         with self._lock:
             leftovers = []
             for lane in self._lanes.values():
@@ -700,6 +699,25 @@ class ContinuousBatchEngine:
                 lane.queue.clear()
         for s in leftovers:
             self._finish_error(s, EngineClosedError("engine closed"))
+
+    def close(self) -> None:
+        """Drain in-flight work, then stop.  Every future submitted
+        before close resolves — with its result when the drain
+        succeeds, with an error otherwise; none is left hanging.
+        Idempotent, and safe to call concurrently from several threads
+        (one closer does the work, the rest wait on its lock)."""
+        with self._close_once:
+            if self._closed:
+                return
+            try:
+                self.drain()
+            except Exception:  # noqa: BLE001 — fail the leftovers below
+                pass
+            self._stop.set()
+            if self._sup is not None:
+                self._sup.join(timeout=5.0)
+            self._fail_leftovers()
+            self._closed = True
 
     def __enter__(self) -> "ContinuousBatchEngine":
         return self

@@ -491,3 +491,167 @@ def test_fault_storm_strands_nothing(rng):
     # the storm's injected-fault ledger is replayable evidence
     assert len(plan.events) >= 4
     assert all(site.startswith("continuous.") for site, _, _ in plan.events)
+
+
+# ---------------------------------------------------------------------------
+# Supervisor restart race (concurrent ensure must charge one restart)
+# ---------------------------------------------------------------------------
+
+
+class TestSupervisorEnsureRace:
+    def _dies_once_then_blocks(self):
+        """A worker target that exits instantly on its first life and
+        blocks forever afterwards (so the post-restart thread cannot
+        die again and muddy the restart count)."""
+        import threading as _t
+        lives = {"n": 0}
+        release = _t.Event()
+
+        def target():
+            lives["n"] += 1
+            if lives["n"] > 1:
+                release.wait()
+
+        return target, release
+
+    def test_concurrent_ensure_restarts_exactly_once(self):
+        import threading as _t
+
+        from repro.resilience.supervisor import WorkerSupervisor
+        target, release = self._dies_once_then_blocks()
+        sup = WorkerSupervisor("race", target, max_restarts=8)
+        sup.start()
+        sup.join(timeout=5.0)  # first life exits immediately
+        assert not sup.alive()
+        barrier = _t.Barrier(8)
+        results = []
+
+        def racer():
+            barrier.wait()
+            results.append(sup.ensure())
+
+        threads = [_t.Thread(target=racer) for _ in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=10.0)
+        try:
+            assert all(results)
+            # one death, eight observers, exactly one restart charged
+            assert sup.restarts == 1
+            assert sup.generation == 2
+        finally:
+            release.set()
+
+    def test_ensure_with_stale_generation_is_noop(self):
+        import threading as _t
+
+        from repro.resilience.supervisor import WorkerSupervisor
+        release = _t.Event()
+        first = {"done": False}
+
+        def target():
+            if not first["done"]:
+                first["done"] = True
+                return
+            release.wait()
+
+        sup = WorkerSupervisor("stale", target, max_restarts=8)
+        sup.start()
+        sup.join(timeout=5.0)
+        assert sup.ensure()  # handles the death: generation 1 -> 2
+        assert sup.restarts == 1
+        try:
+            # an observer that saw generation 1 die reports late: the
+            # death was already handled, so nothing is charged
+            assert sup.ensure(observed_generation=1)
+            assert sup.restarts == 1
+            assert sup.generation == 2
+        finally:
+            release.set()
+
+
+# ---------------------------------------------------------------------------
+# Close/drain under failure (both engines; the fleet's variant lives in
+# tests/test_fleet.py)
+# ---------------------------------------------------------------------------
+
+
+class TestCloseDrainUnderFailure:
+    def test_continuous_double_close_and_submit_after_close(self, rng):
+        from repro.resilience import EngineClosedError
+        dense, mat = _graph(rng, 24)
+        h = rng.standard_normal((24, D)).astype(np.float32)
+        eng = ContinuousBatchEngine(cfg=_cfg())
+        fut = eng.submit(mat, h)
+        eng.close()
+        eng.close()  # idempotent
+        assert fut.done() and fut.exception() is None
+        with pytest.raises(EngineClosedError):
+            eng.submit(mat, h)
+
+    def test_continuous_concurrent_close_resolves_everything(self, rng):
+        import threading as _t
+
+        from repro.resilience import EngineClosedError
+        _, mat = _graph(rng, 24)
+        h = rng.standard_normal((24, D)).astype(np.float32)
+        eng = ContinuousBatchEngine(cfg=_cfg(background=True))
+        futs = [eng.submit(mat, h) for _ in range(4)]
+        closers = [_t.Thread(target=eng.close) for _ in range(3)]
+        for t in closers:
+            t.start()
+        # keep submitting while close races; rejected submissions raise
+        for _ in range(8):
+            try:
+                futs.append(eng.submit(mat, h))
+            except EngineClosedError:
+                break
+        for t in closers:
+            t.join(timeout=30.0)
+        for f in futs:
+            assert f.done()  # a result or EngineClosedError, never a hang
+
+    def test_continuous_close_while_worker_dying(self, rng):
+        _, mat = _graph(rng, 24)
+        h = rng.standard_normal((24, D)).astype(np.float32)
+        eng = ContinuousBatchEngine(cfg=_cfg(background=True))
+        with chaos.active(FaultPlan([
+                FaultSpec(site="continuous.worker", kind="die",
+                          at=1, times=None)], seed=0)):
+            futs = [eng.submit(mat, h) for _ in range(4)]
+            eng.close()
+        for f in futs:
+            assert f.done()
+
+    def test_batch_double_close_and_submit_after_close(self, gcn_setup):
+        from repro.resilience import EngineClosedError
+        from repro.serve.engine import BatchServeConfig, BatchServingEngine
+        cfg, params, graphs = gcn_setup
+        eng = BatchServingEngine.for_gcn(
+            params, scfg=BatchServeConfig(max_batch=4, max_delay_ms=1.0))
+        x = jnp.zeros((graphs[0].n_nodes, cfg.in_features), jnp.float32)
+        fut = eng.submit(graphs[0], x)
+        eng.close()
+        eng.close()  # idempotent
+        assert fut.done() and fut.exception() is None
+        with pytest.raises(EngineClosedError):
+            eng.submit(graphs[0], x)
+
+    def test_batch_concurrent_close_resolves_everything(self, gcn_setup):
+        import threading as _t
+
+        from repro.serve.engine import BatchServeConfig, BatchServingEngine
+        cfg, params, graphs = gcn_setup
+        eng = BatchServingEngine.for_gcn(
+            params, scfg=BatchServeConfig(max_batch=4, max_delay_ms=1.0))
+        futs = [eng.submit(g, jnp.zeros((g.n_nodes, cfg.in_features),
+                                        jnp.float32))
+                for g in graphs for _ in range(2)]
+        closers = [_t.Thread(target=eng.close) for _ in range(3)]
+        for t in closers:
+            t.start()
+        for t in closers:
+            t.join(timeout=30.0)
+        for f in futs:
+            assert f.done()
